@@ -1,0 +1,74 @@
+"""ST API host-side overhead (paper §III: enqueue must be cheap and
+non-blocking — the whole point is that the CPU only appends descriptors).
+
+Measures µs/call for enqueue_send/recv/start/wait, trace-time matching,
+and program build for batches of N descriptors.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+RESULTS: List[Dict] = []
+
+
+def _bench(fn, n: int = 2000) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run_all():
+    from repro.core import OffsetPeer, STQueue
+    from repro.parallel import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    print("ST API overhead (host-side, µs/call)")
+
+    def fresh_queue(n_bufs=2):
+        q = STQueue(mesh, "bench")
+        for i in range(n_bufs):
+            q.buffer(f"b{i}", (64, 64), np.float32, pspec=("x",))
+        return q
+
+    q = fresh_queue()
+    t_send = _bench(lambda: q.enqueue_send("b0", OffsetPeer("x", 1), tag=0))
+    q2 = fresh_queue()
+    t_recv = _bench(lambda: q2.enqueue_recv("b1", OffsetPeer("x", -1), tag=0))
+
+    q3 = fresh_queue()
+    def send_recv_start():
+        q3.enqueue_recv("b1", OffsetPeer("x", -1), tag=0)
+        q3.enqueue_send("b0", OffsetPeer("x", 1), tag=0)
+        q3.enqueue_start()
+    t_batch = _bench(send_recv_start, n=500)
+
+    for name, us in [("enqueue_send", t_send), ("enqueue_recv", t_recv),
+                     ("send+recv+start", t_batch)]:
+        RESULTS.append({"bench": "api_overhead", "variant": name,
+                        "us_per_call": us, "derived": "host_nonblocking"})
+        print(f"  {name:18s} {us:8.2f} us/call")
+
+    # build (matching) cost vs batch size
+    for n in (26, 260, 1040):
+        q4 = fresh_queue()
+        for i in range(n):
+            q4.enqueue_recv("b1", OffsetPeer("x", -1), tag=i)
+        for i in range(n):
+            q4.enqueue_send("b0", OffsetPeer("x", 1), tag=i)
+        q4.enqueue_start()
+        q4.enqueue_wait()
+        t0 = time.perf_counter()
+        prog = q4.build()
+        dt = (time.perf_counter() - t0) * 1e6
+        RESULTS.append({"bench": "api_overhead",
+                        "variant": f"build_match_n{n}",
+                        "us_per_call": dt,
+                        "derived": f"us_per_descriptor={dt/(2*n):.2f}"})
+        print(f"  build+match n={n:5d} {dt:10.1f} us "
+              f"({dt/(2*n):.2f} us/descriptor)")
+    return RESULTS

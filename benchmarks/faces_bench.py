@@ -1,0 +1,158 @@
+"""Faces microbenchmark — the paper's §V experiments (Figs. 8–12).
+
+Reproduces each figure's *experimental contrast* on the CPU-device grid
+(absolute Slingshot timings need the NIC; the control-path contrasts do
+not — see DESIGN.md §9):
+
+fig8   64×1×1-style 1-D multi-rank: baseline (host-orchestrated, batch
+       sync) vs ST-emulated (host engine, per-op sync — the progress-
+       thread tax) vs ST-offloaded (fused).  Paper: ST 10% *slower*
+       when the progress thread dominates.
+fig9   single-node intra: baseline vs progress-thread emulation.
+       Paper: ST 4% slower.
+fig10  1 rank/node 1-D: baseline vs fully-offloaded ST.  Paper: parity.
+fig11  2×2×2 3-D (26 neighbors): same A/B.  Paper: ST +4% — the win
+       grows with message count because each message costs the host a
+       dispatch but costs the fused program nothing.
+fig12  trigger tuning: stock stream-memory ops (ST `stream` mode,
+       strict FIFO barriers) vs hand-tuned shaders (ST `dataflow` mode,
+       minimal ordering).  Paper: +8% over baseline.
+
+Loop configuration mirrors the paper (§V-B): outer × middle × inner
+with buffer alloc in the outer loop; defaults are scaled down for CPU
+(env FACES_INNER etc. override).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+RESULTS: List[Dict] = []
+
+
+def _cfg_env(name, default):
+    return int(os.environ.get(name, default))
+
+
+def _time_engine(engine, mem, inner: int, repeats: int = 5):
+    import jax
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        m = dict(mem)
+        for _ in range(inner):
+            m = engine(m)
+        jax.block_until_ready(list(m.values()))
+        times.append(time.perf_counter() - t0)
+    return {"avg_s": float(np.mean(times)), "min_s": float(np.min(times)),
+            "max_s": float(np.max(times))}
+
+
+def _setup(grid, points, **cfg_kw):
+    import jax
+    from repro.core import FacesConfig, FusedEngine, HostEngine, build_faces_program
+    from repro.parallel import make_mesh
+
+    mesh = make_mesh(grid, ("gx", "gy", "gz"))
+    cfg = FacesConfig(grid=grid, points=points, **cfg_kw)
+    prog = build_faces_program(cfg, mesh)
+    rng = np.random.RandomState(0)
+    u0 = rng.randn(*grid, *points).astype(np.float32)
+    return cfg, prog, u0
+
+
+def _variants(prog, u0, inner, which=("baseline", "st_emulated", "st_offload")):
+    from repro.core import FusedEngine, HostEngine
+
+    out = {}
+    specs = {
+        "baseline": (HostEngine, {"sync": "batch"}, prog.dispatch_count_host()),
+        "st_emulated": (HostEngine, {"sync": "every_op"},
+                        prog.dispatch_count_host()),
+        "st_offload": (FusedEngine, {"mode": "stream"}, 1),
+        "st_tuned": (FusedEngine, {"mode": "dataflow"}, 1),
+    }
+    for name in which:
+        cls, kw, n_disp = specs[name]
+        eng = cls(prog, **kw)
+        mem = eng.init_buffers({"u": u0})
+        eng(dict(mem))  # warm every per-descriptor/fused compile
+        r = _time_engine(eng, mem, inner)
+        r["dispatches_per_iter"] = n_disp
+        out[name] = r
+    return out
+
+
+def _report(fig: str, variants: Dict, paper_claim: str):
+    base = variants.get("baseline", {}).get("avg_s")
+    for name, r in variants.items():
+        rel = (r["avg_s"] / base) if base else float("nan")
+        RESULTS.append({
+            "bench": f"faces_{fig}", "variant": name,
+            "us_per_call": r["avg_s"] * 1e6,
+            "derived": f"rel_to_baseline={rel:.3f};"
+                       f"dispatches={r['dispatches_per_iter']}",
+        })
+        print(f"  {fig:6s} {name:12s} avg={r['avg_s']*1e3:9.2f}ms "
+              f"min={r['min_s']*1e3:9.2f}ms rel={rel:6.3f} "
+              f"dispatch/iter={r['dispatches_per_iter']}")
+    print(f"  paper: {paper_claim}")
+
+
+def fig8(inner=None):
+    """8 ranks 1-D, many messages per rank, progress-thread emulation."""
+    inner = inner or _cfg_env("FACES_INNER", 10)
+    _, prog, u0 = _setup((8, 1, 1), (12, 12, 12))
+    v = _variants(prog, u0, inner)
+    _report("fig8", v, "ST 10% slower than baseline (progress-thread tax)")
+    return v
+
+
+def fig9(inner=None):
+    """Intra-node: baseline vs per-op progress thread."""
+    inner = inner or _cfg_env("FACES_INNER", 10)
+    _, prog, u0 = _setup((8, 1, 1), (12, 12, 12))
+    v = _variants(prog, u0, inner, which=("baseline", "st_emulated"))
+    _report("fig9", v, "ST 4% slower (progress thread per MPI process)")
+    return v
+
+
+def fig10(inner=None):
+    """1-D, full NIC offload: parity or better."""
+    inner = inner or _cfg_env("FACES_INNER", 10)
+    _, prog, u0 = _setup((8, 1, 1), (12, 12, 12))
+    v = _variants(prog, u0, inner, which=("baseline", "st_offload"))
+    _report("fig10", v, "ST ≈ parity with baseline (HW offload)")
+    return v
+
+
+def fig11(inner=None):
+    """2×2×2 3-D (26 neighbors): offload advantage grows."""
+    inner = inner or _cfg_env("FACES_INNER", 10)
+    _, prog, u0 = _setup((2, 2, 2), (12, 12, 12))
+    v = _variants(prog, u0, inner, which=("baseline", "st_offload"))
+    _report("fig11", v, "ST 4% faster (NIC offload, more messages)")
+    return v
+
+
+def fig12(inner=None):
+    """Trigger tuning: strict stream-memory ops vs relaxed triggers."""
+    inner = inner or _cfg_env("FACES_INNER", 10)
+    _, prog, u0 = _setup((2, 2, 2), (12, 12, 12))
+    v = _variants(prog, u0, inner,
+                  which=("baseline", "st_offload", "st_tuned"))
+    _report("fig12", v, "ST-shader 8% faster than baseline (tuned triggers)")
+    return v
+
+
+def run_all():
+    print("Faces microbenchmark (paper §V; 8 host devices)")
+    for fn in (fig8, fig9, fig10, fig11, fig12):
+        print(f"-- {fn.__name__}: {fn.__doc__.splitlines()[0]}")
+        fn()
+    return RESULTS

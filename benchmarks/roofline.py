@@ -1,0 +1,192 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh).
+
+Reads the dry-run artifacts (``artifacts/dryrun/*.json``) and derives:
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_wire_bytes / (ICI links × link bw)
+
+``cost_analysis()`` on the partitioned module reports per-device FLOPs /
+bytes.  Collective bytes are parsed from the optimized HLO
+(hlo_analysis.py) — with one correction applied here: collectives inside
+``while``-loop bodies (the scan over layers) appear ONCE in the text but
+execute once per layer, so ops inside loop-body computations are scaled
+by the layer trip count.  This is an estimate, cross-checked against the
+analytic per-layer expectation in EXPERIMENTS.md §Roofline.
+
+Also reports MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D
+(inference) + the attention S² term, and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs × chips).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS_BF16  # noqa: E402
+from repro.models.counting import model_flops, model_memory_bytes  # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+COSTING = os.path.join(os.path.dirname(__file__), "..", "artifacts", "costing")
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "roofline")
+
+
+def _loop_scale(cfg, shape_kind: str) -> float:
+    """Scan-over-layers trip count (collectives in the loop body execute
+    this many times but appear once in the HLO text)."""
+    n = cfg.n_layers + (cfg.n_enc_layers if cfg.enc_dec else 0)
+    return float(max(n, 1))
+
+
+def load_record(arch: str, shape: str, mesh: str) -> Optional[Dict]:
+    path = os.path.join(ARTIFACTS, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))
+
+
+def roofline_row(rec: Dict, *, loop_scale_colls: bool = True) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = rec["n_devices"]
+
+    # prefer the calibrated (unrolled) costing artifact when available —
+    # it has exact static costs (no scan-body undercount)
+    cost_path = os.path.join(
+        COSTING, f"{arch}__{shape_name}__{rec['mesh']}.json")
+    source = "dryrun+loopscale"
+    dot_flops = None
+    if os.path.exists(cost_path):
+        crec = json.load(open(cost_path))
+        if crec.get("status") == "ok":
+            flops_dev = crec["flops"]
+            bytes_dev = crec["bytes"]
+            coll_bytes = crec["coll_bytes"]
+            coll_mix = crec.get("coll_by_kind", {})
+            dot_flops = crec.get("dot_flops")
+            source = crec.get("mode", "costing")
+            return _row(rec, cfg, shape, chips, flops_dev, bytes_dev,
+                        coll_bytes, coll_mix, dot_flops, source)
+
+    flops_dev = rec["flops"]                      # per device
+    bytes_dev = rec["bytes_accessed"]             # per device
+    coll_bytes = rec["collectives"]["total_bytes"]
+    if loop_scale_colls:
+        coll_bytes = coll_bytes * _loop_scale(cfg, shape.kind)
+        flops_dev = flops_dev * _loop_scale(cfg, shape.kind)
+        bytes_dev = bytes_dev * _loop_scale(cfg, shape.kind)
+    return _row(rec, cfg, shape, chips, flops_dev, bytes_dev, coll_bytes,
+                rec["collectives"]["bytes_by_kind"], None, source)
+
+
+def _row(rec, cfg, shape, chips, flops_dev, bytes_dev, coll_bytes,
+         coll_mix, dot_flops, source):
+
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory_ub = bytes_dev / HBM_BW          # HLO bytes: unfused UPPER bound
+    mem_lb = model_memory_bytes(cfg, shape, chips=chips)
+    t_memory = mem_lb / HBM_BW                # analytic fused LOWER bound
+    t_coll = coll_bytes / (ICI_BW * ICI_LINKS)
+
+    # dominance uses the fused (lower-bound) memory term: TPU fusion is
+    # good, and the unfused bound would mark every row memory-bound.
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    useful_ratio = mf["model_flops"] / max(flops_dev * chips, 1.0)
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips, "source": source,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_ub_s": t_memory_ub,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf["model_flops"],
+        "hlo_flops_total": flops_dev * chips,
+        "dot_flops_dev": dot_flops,
+        "useful_ratio": useful_ratio,
+        "n_params": mf["n_params"], "n_active": mf["n_active"],
+        "coll_bytes_dev": coll_bytes,
+        "collective_mix": coll_mix,
+        "temp_bytes_dev": rec.get("memory", {}).get("temp_size_in_bytes"),
+        "arg_bytes_dev": rec.get("memory", {}).get("argument_size_in_bytes"),
+    }
+
+
+def build_table(mesh: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": rec["reason"]})
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def print_table(rows: List[Dict], file=sys.stdout):
+    hdr = (f"{'arch':20s} {'shape':12s} {'compute':>10s} {'mem_lb':>10s} "
+           f"{'mem_ub':>10s} {'collect':>10s} {'dominant':>10s} {'useful':>7s}")
+    print(hdr, file=file)
+    print("-" * len(hdr), file=file)
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:20s} {r['shape']:12s} {'SKIPPED: ' + r['skipped'][:60]}",
+                  file=file)
+            continue
+        print(f"{r['arch']:20s} {r['shape']:12s} "
+              f"{_fmt_s(r['t_compute_s']):>10s} {_fmt_s(r['t_memory_s']):>10s} "
+              f"{_fmt_s(r.get('t_memory_ub_s')):>10s} "
+              f"{_fmt_s(r['t_collective_s']):>10s} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.3f}", file=file)
+
+
+def save(rows: List[Dict], mesh: str):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"roofline_{mesh}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def main(argv=None):
+    mesh = "pod16x16"
+    if argv and len(argv) > 1:
+        mesh = argv[1]
+    rows = build_table(mesh)
+    print(f"\n=== Roofline table ({mesh}) — terms in seconds/step ===\n")
+    print_table(rows)
+    save(rows, mesh)
+    n_dom = {}
+    for r in rows:
+        if "dominant" in r:
+            n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    print(f"\nDominant-term counts: {n_dom}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv)

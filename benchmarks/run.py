@@ -1,0 +1,64 @@
+import os
+# Benchmarks need a small multi-device grid (the Faces figures use 8
+# ranks, matching the paper's 8-node experiments).  This is the bench
+# entry point only — tests and the dry-run manage their own device
+# counts (dryrun.py forces 512; pytest keeps the 1 real device).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run faces      # one suite
+
+Prints ``name,us_per_call,derived`` CSV at the end (plus human-readable
+sections), and writes artifacts/bench_results.json.
+"""
+
+import json
+import sys
+
+
+def main() -> None:
+    here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, os.path.join(here, "..", "src"))
+    sys.path.insert(0, os.path.join(here, ".."))
+
+    from benchmarks import api_overhead, faces_bench, overlap_bench
+    from benchmarks import roofline as roofline_mod
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    results = []
+
+    if which in ("all", "api"):
+        results += api_overhead.run_all()
+    if which in ("all", "faces"):
+        results += faces_bench.run_all()
+    if which in ("all", "overlap"):
+        results += overlap_bench.run_all()
+    if which in ("all", "roofline"):
+        rows = roofline_mod.main(None)
+        for r in rows:
+            if "skipped" in r:
+                continue
+            results.append({
+                "bench": "roofline", "variant": f"{r['arch']}/{r['shape']}",
+                "us_per_call": max(r["t_compute_s"], r["t_memory_s"],
+                                   r["t_collective_s"]) * 1e6,
+                "derived": f"dominant={r['dominant']};"
+                           f"useful={r['useful_ratio']:.3f}",
+            })
+
+    print("\nname,us_per_call,derived")
+    for r in results:
+        print(f"{r['bench']}/{r['variant']},{r['us_per_call']:.2f},"
+              f"\"{r['derived']}\"")
+
+    out = os.path.join(here, "..", "artifacts", "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {out}")
+
+
+if __name__ == '__main__':
+    main()

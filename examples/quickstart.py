@@ -1,0 +1,64 @@
+"""Quickstart: the ST (stream-triggered) communication API in 60 lines.
+
+Mirrors the paper's Fig. 7 usage example: enqueue kernels + batched
+sends/receives on a queue, trigger them with ONE start, gate downstream
+work with ONE wait — then execute the whole thing as a single fused XLA
+program (the TPU analogue of GPU-CP-driven triggered operations).
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.core import FusedEngine, HostEngine, OffsetPeer, create_queue
+from repro.parallel import make_mesh
+
+mesh = make_mesh((8,), ("rank",))
+q = create_queue(mesh, "quickstart")
+
+# Buffers (global view, sharded over the rank axis).
+q.buffer("src", (8, 128), np.float32, pspec=("rank",))
+q.buffer("dst", (8, 128), np.float32, pspec=("rank",))
+
+# D1: a compute kernel producing the data to send (paper: launch kernel).
+q.enqueue_kernel(lambda s: s * 2.0 + 1.0, reads=["src"], writes=["src"],
+                 name="D1")
+
+# Batched ST communication: 4 tagged sends to the right neighbor, 4
+# matching receives from the left — ONE start triggers all of them.
+for tag in range(4):
+    q.enqueue_recv("dst", OffsetPeer("rank", -1, periodic=True), tag=tag,
+                   mode="add")
+for tag in range(4):
+    q.enqueue_send("src", OffsetPeer("rank", +1, periodic=True), tag=tag)
+q.enqueue_start()   # MPIX_Enqueue_start  (writeValue → NIC trigger)
+q.enqueue_wait()    # MPIX_Enqueue_wait   (waitValue → stream gate)
+
+# D2: consumes the received data; ordered after the wait.
+q.enqueue_kernel(lambda d: d / 4.0, reads=["dst"], writes=["dst"], name="D2")
+
+prog = q.build()
+print(f"program: {prog.n_batches} trigger batch(es), {prog.n_channels} "
+      f"matched channels, host dispatches {prog.dispatch_count_host()} "
+      f"vs fused {prog.dispatch_count_fused()}")
+
+# ST execution: ONE device program.
+st = FusedEngine(prog, mode="stream")
+mem = st.init_buffers({"src": np.ones((8, 128), np.float32)})
+out_st = st(mem)
+
+# Baseline execution: host-orchestrated per-descriptor dispatch (Fig. 1).
+host = HostEngine(prog, sync="every_op")
+out_host = host(host.init_buffers({"src": np.ones((8, 128), np.float32)}))
+
+np.testing.assert_allclose(np.asarray(out_st["dst"]),
+                           np.asarray(out_host["dst"]), rtol=1e-6)
+print("fused ST result == host-orchestrated result ✓")
+print(f"host control path: {host.stats.dispatches} dispatches, "
+      f"{host.stats.sync_points} host-device syncs; ST: 1 dispatch, 1 sync")
+print("dst row 0 (each rank received 4× its left neighbor's kernel output):")
+print(np.asarray(out_st["dst"])[0, :6])

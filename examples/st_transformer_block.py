@@ -1,0 +1,84 @@
+"""ST-integrated transformer block: model collectives through STQueue.
+
+The paper's interface batches *communication descriptors* and triggers
+them from the device stream.  This example applies the same programming
+model to a Megatron-style sequence-parallel MLP block — the per-layer
+collectives become deferred ST descriptors between compute kernels:
+
+    enqueue_collective(all_gather x)       # sequence-parallel gather
+    enqueue_start(); enqueue_wait()        # trigger + stream gate
+    enqueue_kernel(h = silu(x @ w1_loc))   # column-parallel
+    enqueue_kernel(y~ = h @ w2_loc)        # row-parallel (partial sums)
+    enqueue_collective(reduce_scatter y~)  # TP combine + re-scatter
+    enqueue_start(); enqueue_wait()
+
+Both engines execute the same program; results match a plain jnp
+reference of the unsharded block.
+
+Run:  PYTHONPATH=src python examples/st_transformer_block.py
+"""
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FusedEngine, HostEngine, create_queue
+from repro.parallel import make_mesh
+
+N = 8                            # tp ranks
+T, D, FL = 16, 128, 64           # tokens/shard, model dim, ff dim/shard
+mesh = make_mesh((N,), ("tp",))
+
+q = create_queue(mesh, "st_mlp")
+q.buffer("x", (N * T, D), np.float32, pspec=("tp",))          # seq-parallel
+q.buffer("x_full", (N * N * T, D), np.float32, pspec=("tp",))  # gathered/shard
+q.buffer("w1", (N, D, FL), np.float32, pspec=("tp",))          # column-par
+q.buffer("w2", (N, FL, D), np.float32, pspec=("tp",))          # row-par
+q.buffer("h", (N * N * T, FL), np.float32, pspec=("tp",))
+q.buffer("y_part", (N * N * T, D), np.float32, pspec=("tp",))
+q.buffer("y", (N * T, D), np.float32, pspec=("tp",))
+
+# batch 1: deferred sequence-parallel all-gather of the activations
+q.enqueue_collective("all_gather", "x", "x_full", "tp", dim=0)
+q.enqueue_start()
+q.enqueue_wait()
+
+# compute kernels (local views: x_full [N*T,D], w1 [1,D,FL], w2 [1,FL,D])
+q.enqueue_kernel(lambda xf, w1: jax.nn.silu(xf @ w1[0]),
+                 reads=["x_full", "w1"], writes=["h"], name="mlp_in")
+q.enqueue_kernel(lambda h, w2: h @ w2[0],
+                 reads=["h", "w2"], writes=["y_part"], name="mlp_out")
+
+# batch 2: deferred TP reduce-scatter (combine partial sums, re-scatter seq)
+q.enqueue_collective("reduce_scatter", "y_part", "y", "tp", dim=0)
+q.enqueue_start()
+q.enqueue_wait()
+
+prog = q.build()
+print(f"ST MLP block: {len(prog.descriptors)} descriptors, "
+      f"{prog.n_batches} trigger batches, host dispatches "
+      f"{prog.dispatch_count_host()} vs fused {prog.dispatch_count_fused()}")
+
+rng = np.random.RandomState(0)
+x0 = rng.randn(N * T, D).astype(np.float32) * 0.5
+w1 = rng.randn(N, D, FL).astype(np.float32) * 0.05
+w2 = rng.randn(N, FL, D).astype(np.float32) * 0.05
+
+fused = FusedEngine(prog, mode="dataflow")
+out_f = fused(fused.init_buffers({"x": x0, "w1": w1, "w2": w2}))
+host = HostEngine(prog, sync="every_op")
+out_h = host(host.init_buffers({"x": x0, "w1": w1, "w2": w2}))
+
+# unsharded reference: w1 concat over FL columns, w2 concat over FL rows
+w1_full = np.concatenate(list(w1), axis=1)          # (D, N*FL)
+w2_full = np.concatenate(list(w2), axis=0)          # (N*FL, D)
+y_ref = np.asarray(jax.nn.silu(jnp.asarray(x0) @ w1_full)) @ w2_full
+
+np.testing.assert_allclose(np.asarray(out_f["y"]), y_ref, rtol=2e-4, atol=2e-4)
+np.testing.assert_allclose(np.asarray(out_h["y"]), y_ref, rtol=2e-4, atol=2e-4)
+print("fused == host == unsharded reference ✓")
+print(f"host control path: {host.stats.dispatches} dispatches / "
+      f"{host.stats.sync_points} syncs; ST: 1 / 1")

@@ -1,0 +1,45 @@
+"""End-to-end training driver: ~100M-param model, a few hundred steps.
+
+Trains a reduced-depth glm4-family decoder (≈100M params) on the
+synthetic Markov stream with the full production stack: sharded params
+(data×model mesh), AdamW, LR schedule, checkpointing.  Loss should drop
+from ~10.9 (ln V) to well under 7 within a few hundred steps.
+
+Run:  PYTHONPATH=src python examples/train_tiny.py [--steps 300]
+"""
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.launch.train import train
+from repro.optim import AdamWConfig
+from repro.parallel import make_mesh
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+args = ap.parse_args()
+
+cfg = dataclasses.replace(
+    get_config("glm4-9b"),
+    name="glm4-100m",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=2, d_ff=2560,
+    vocab=4096, dtype="float32", param_dtype="float32",
+    scan_layers=True, remat="none",
+)
+from repro.models.counting import count_params
+print(f"model: {cfg.name}, {count_params(cfg)/1e6:.1f}M params")
+
+mesh = make_mesh((2, 2), ("data", "model"))
+shape = ShapeConfig("tiny_train", args.seq, args.batch, "train")
+params, opt_state, hist = train(
+    cfg, shape, mesh, steps=args.steps,
+    opt=AdamWConfig(lr=1e-3, weight_decay=0.01),
+    checkpoint_dir="/tmp/repro_ckpt", checkpoint_every=100, log_every=20)
+first, last = hist[0]["loss"], hist[-1]["loss"]
+print(f"loss {first:.3f} -> {last:.3f} ({'LEARNED ✓' if last < first - 1 else 'check settings'})")

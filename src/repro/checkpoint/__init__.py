@@ -1,0 +1,4 @@
+"""Checkpoint substrate."""
+from .checkpoint import restore_pytree, save_pytree, latest_step
+
+__all__ = ["save_pytree", "restore_pytree", "latest_step"]

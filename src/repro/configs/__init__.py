@@ -1,0 +1,12 @@
+"""Architecture configs (one module per assigned arch) + input shapes."""
+from .base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig",
+           "all_configs", "get_config"]

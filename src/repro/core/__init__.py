@@ -1,0 +1,60 @@
+"""repro.core — stream-triggered (ST) communication for JAX.
+
+The paper's contribution as a composable JAX module:
+
+* :mod:`.queue`        — ``STQueue``/``create_queue``: the MPIX_Queue API
+* :mod:`.descriptors`  — deferred command descriptors + peer specs
+* :mod:`.matching`     — trace-time two-sided tag matching
+* :mod:`.counters`     — trigger/completion counters as data dependencies
+* :mod:`.engine_fused` — ST execution: one fused XLA program
+* :mod:`.engine_host`  — baseline: host-orchestrated per-op dispatch
+* :mod:`.halo`         — the Faces 26-neighbor pattern as an ST program
+* :mod:`.overlap`      — decomposed overlap-friendly collectives
+"""
+
+from .counters import (
+    CompletionCounter,
+    TriggerCounter,
+    bump,
+    completion_from,
+    fresh_token,
+    gate,
+    tie,
+)
+from .descriptors import (
+    BufferSpec,
+    CollDesc,
+    GridOffsetPeer,
+    KernelDesc,
+    OffsetPeer,
+    PairListPeer,
+    RecvDesc,
+    SendDesc,
+    StartDesc,
+    WaitDesc,
+)
+from .engine_fused import FusedEngine
+from .engine_host import HostEngine, HostStats
+from .halo import (
+    CORNERS,
+    DIRECTIONS,
+    EDGES,
+    FACES,
+    FacesConfig,
+    build_faces_program,
+    faces_oracle,
+)
+from .matching import Batch, Channel, MatchError, match_batch
+from .queue import QueueError, STProgram, STQueue, create_queue
+
+__all__ = [
+    "STQueue", "STProgram", "create_queue", "QueueError",
+    "FusedEngine", "HostEngine", "HostStats",
+    "OffsetPeer", "GridOffsetPeer", "PairListPeer",
+    "SendDesc", "RecvDesc", "CollDesc", "KernelDesc", "StartDesc", "WaitDesc",
+    "BufferSpec", "Batch", "Channel", "MatchError", "match_batch",
+    "TriggerCounter", "CompletionCounter", "fresh_token", "bump", "tie",
+    "gate", "completion_from",
+    "FacesConfig", "build_faces_program", "faces_oracle",
+    "DIRECTIONS", "FACES", "EDGES", "CORNERS",
+]

@@ -1,0 +1,152 @@
+"""Trigger / completion counters — the ST synchronization primitives.
+
+The paper's ST design synchronizes three agents (CPU, GPU control
+processor, NIC) through two hardware counters per ``MPIX_Queue``:
+
+* a **trigger counter**: the GPU CP bumps it with a stream-memory
+  ``writeValue``; every deferred NIC descriptor whose threshold is met
+  fires;
+* a **completion counter**: the NIC bumps it as operations complete; the
+  GPU CP blocks the *stream* on it with ``waitValue``.
+
+On TPU there is no user-visible NIC command queue, so counters cannot be
+(and need not be) hardware objects.  Inside a fused XLA program the same
+ordering contract is expressed as *data dependencies*: a counter is a
+scalar value threaded through the program, and "bump then fire" becomes
+"make the communication op's operand depend on the bumped scalar".
+``jax.lax.optimization_barrier`` is the lowering-level tool that pins a
+value and a counter together without adding arithmetic to either.
+
+This module provides the counter objects plus the two primitives used by
+the engines:
+
+``tie(token, *arrays)``
+    writeValue analogue: returns ``(token', arrays')`` such that nothing
+    consuming ``arrays'`` may be scheduled before every producer of
+    ``token`` — and vice versa.
+
+``gate(token, *arrays)``
+    waitValue analogue: identical mechanics, used on the *consumer* side
+    to make downstream kernels depend on a completion counter.
+
+Both are implemented with ``optimization_barrier`` so they survive XLA
+simplification (a ``+0`` style fake dependency would be DCE'd away).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_counter_ids = itertools.count()
+
+
+def fresh_token() -> jax.Array:
+    """A new trigger-counter value (the counter starts at 0)."""
+    return jnp.zeros((), dtype=jnp.int32)
+
+
+def bump(token: jax.Array, amount: int = 1) -> jax.Array:
+    """``writeValue``: advance the counter.  Pure arithmetic; ordering
+    comes from `tie`/`gate` around it."""
+    return token + jnp.int32(amount)
+
+
+def tie(token: jax.Array, *arrays: Any):
+    """Tie ``arrays`` to ``token`` (writeValue / trigger edge).
+
+    Returns ``(token, arrays)`` where each leaf of ``arrays`` is ordered
+    with respect to the token by an optimization barrier.  Consumers of
+    the returned arrays observe program points at-or-after the token's
+    producers (the enqueued `start`), which is exactly the deferred
+    "do not execute until triggered" contract of a DWQ descriptor.
+    """
+    flat, treedef = jax.tree.flatten(arrays)
+    out = jax.lax.optimization_barrier((token, *flat))
+    token_out, flat_out = out[0], list(out[1:])
+    arrs = jax.tree.unflatten(treedef, flat_out)
+    return token_out, arrs
+
+
+def gate(token: jax.Array, *arrays: Any):
+    """``waitValue``: gate downstream consumers of ``arrays`` on the
+    completion counter ``token``.  Mechanically identical to `tie`; kept
+    separate so lowered programs read like the paper's stream
+    (write → trigger → ... → wait → kernel)."""
+    return tie(token, *arrays)
+
+
+def completion_from(token: jax.Array, *results: Any) -> jax.Array:
+    """Derive a completion-counter value from communication results.
+
+    The NIC bumps the completion counter once per finished descriptor;
+    here, the counter becomes data-dependent on every result array, so
+    anything gated on it observes the received data.
+    """
+    flat = jax.tree.leaves(results)
+    out = jax.lax.optimization_barrier((token, *flat))
+    return bump(out[0], len(flat))
+
+
+@dataclasses.dataclass
+class TriggerCounter:
+    """Host-side handle for a queue's trigger counter.
+
+    ``threshold`` bookkeeping mirrors the SS11 DWQ descriptor fields: a
+    descriptor enqueued when the counter's *scheduled* value is ``v``
+    gets threshold ``v + 1`` and fires on the matching `start`.
+    """
+
+    name: str = ""
+    scheduled: int = 0  # value the counter will have reached after all
+    # currently-enqueued starts have executed.
+
+    def __post_init__(self):
+        if not self.name:
+            self.name = f"trig{next(_counter_ids)}"
+
+    def next_threshold(self) -> int:
+        return self.scheduled + 1
+
+    def record_start(self) -> int:
+        """A `start` was enqueued: the counter will be bumped once."""
+        self.scheduled += 1
+        return self.scheduled
+
+
+@dataclasses.dataclass
+class CompletionCounter:
+    """Host-side handle for a queue's completion counter.
+
+    ``expected`` counts descriptors whose completion the next `wait`
+    must observe (the waitValue threshold).
+    """
+
+    name: str = ""
+    expected: int = 0
+
+    def __post_init__(self):
+        if not self.name:
+            self.name = f"comp{next(_counter_ids)}"
+
+    def record_op(self, n: int = 1) -> int:
+        self.expected += n
+        return self.expected
+
+
+def chain_strict(token: jax.Array, arrays: Sequence[Any]):
+    """Strict stream order: pin *every* array to the token in sequence.
+
+    Used by the engines' ``strict`` mode to reproduce literal GPU-stream
+    FIFO semantics (each op ordered after the previous one), trading
+    away XLA's freedom to overlap independent ops.
+    """
+    out = []
+    for a in arrays:
+        token, a = tie(token, a)
+        out.append(a)
+    return token, out

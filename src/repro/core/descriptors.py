@@ -1,0 +1,214 @@
+"""Deferred-execution descriptors — the ST command-queue entries.
+
+An ``STQueue`` records a *program*: an ordered list of descriptors, the
+JAX analogue of (a) the NIC command queue holding DWQ entries and (b)
+the GPU stream holding kernels and stream-memory ops.  Nothing executes
+at enqueue time; an engine executes the program later (fused into one
+XLA computation, or host-orchestrated per descriptor).
+
+Descriptor kinds
+----------------
+``KernelDesc``    a compute kernel enqueued on the stream (D1, D2 in the
+                  paper's Fig. 6).  Operates on named buffers.
+``SendDesc``      MPIX_Enqueue_send: deferred tagged send to a peer.
+``RecvDesc``      MPIX_Enqueue_recv: deferred tagged receive.
+``CollDesc``      extension beyond the paper's P2P surface: a whole
+                  collective (all-gather / reduce-scatter / all-to-all /
+                  all-reduce) as a single deferred descriptor, so model
+                  code can route *all* its communication through a queue.
+``StartDesc``     MPIX_Enqueue_start: trigger everything enqueued since
+                  the previous start (one writeValue for the batch).
+``WaitDesc``      MPIX_Enqueue_wait: stream-blocking completion wait
+                  (one waitValue for the batch).
+
+Peers
+-----
+The paper addresses peers by MPI rank.  Under SPMD the same program runs
+on every device, so a peer is expressed relationally:
+
+* ``OffsetPeer(axis, delta)`` — "the rank `delta` steps along mesh axis
+  `axis`"; non-periodic offsets drop at the boundary (ppermute semantics:
+  unmatched receivers get zeros — which is exactly what a halo sum
+  wants).
+* ``GridOffsetPeer(axes, deltas, periodic)`` — diagonal neighbor on a
+  multi-axis grid (the 26-neighbor Faces pattern).
+* ``PairListPeer(axis, pairs)`` — explicit (src, dst) rank pairs, the
+  closest analogue of the paper's Fig. 7 two-rank example.  Legal
+  because ST forbids wildcards: the global pattern is static.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Peer specifications
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OffsetPeer:
+    axis: str
+    delta: int
+    periodic: bool = False
+
+    def inverse(self) -> "OffsetPeer":
+        return OffsetPeer(self.axis, -self.delta, self.periodic)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridOffsetPeer:
+    axes: Tuple[str, ...]
+    deltas: Tuple[int, ...]
+    periodic: bool = False
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.deltas):
+            raise ValueError("axes and deltas must align")
+
+    def inverse(self) -> "GridOffsetPeer":
+        return GridOffsetPeer(self.axes, tuple(-d for d in self.deltas), self.periodic)
+
+
+@dataclasses.dataclass(frozen=True)
+class PairListPeer:
+    axis: str
+    pairs: Tuple[Tuple[int, int], ...]  # (src_rank, dst_rank)
+
+    def inverse(self) -> "PairListPeer":
+        # From the receiver's point of view the pairs are identical; the
+        # match check compares (src, dst) sets directly.
+        return PairListPeer(self.axis, self.pairs)
+
+
+Peer = Any  # OffsetPeer | GridOffsetPeer | PairListPeer
+
+
+def perm_for(peer: Peer, mesh_shape: dict) -> Tuple[str, Sequence[Tuple[int, int]]]:
+    """Resolve a peer spec into (axis_name(s), ppermute permutation).
+
+    For grid offsets the permutation is computed over the *flattened*
+    multi-axis grid; the engine ppermutes over the axis tuple.
+    Returns (axis or tuple-of-axes, [(src, dst), ...]).
+    """
+    if isinstance(peer, PairListPeer):
+        return peer.axis, list(peer.pairs)
+
+    if isinstance(peer, OffsetPeer):
+        n = mesh_shape[peer.axis]
+        pairs = []
+        for src in range(n):
+            dst = src + peer.delta
+            if peer.periodic:
+                dst %= n
+            elif not (0 <= dst < n):
+                continue
+            pairs.append((src, dst))
+        return peer.axis, pairs
+
+    if isinstance(peer, GridOffsetPeer):
+        dims = [mesh_shape[a] for a in peer.axes]
+        pairs = []
+        for src_multi in np.ndindex(*dims):
+            dst_multi = []
+            ok = True
+            for c, d, n in zip(src_multi, peer.deltas, dims):
+                t = c + d
+                if peer.periodic:
+                    t %= n
+                elif not (0 <= t < n):
+                    ok = False
+                    break
+                dst_multi.append(t)
+            if not ok:
+                continue
+            src = int(np.ravel_multi_index(src_multi, dims))
+            dst = int(np.ravel_multi_index(tuple(dst_multi), dims))
+            pairs.append((src, dst))
+        return tuple(peer.axes), pairs
+
+    raise TypeError(f"unknown peer spec: {peer!r}")
+
+
+# --------------------------------------------------------------------------
+# Descriptors
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KernelDesc:
+    """A compute kernel enqueued on the stream.
+
+    ``fn(*reads) -> writes`` must be a pure JAX function over the *local*
+    (per-shard) views of the named buffers.  ``writes`` names receive the
+    outputs positionally.
+    """
+
+    fn: Callable
+    reads: Tuple[str, ...]
+    writes: Tuple[str, ...]
+    name: str = "kernel"
+
+
+@dataclasses.dataclass
+class SendDesc:
+    buf: str
+    peer: Peer
+    tag: int
+    # Trigger threshold (SS11 DWQ field); filled in by the queue.
+    threshold: int = -1
+    # Optional slice of the buffer to send: tuple of slice objects.
+    region: Optional[Tuple[slice, ...]] = None
+
+
+@dataclasses.dataclass
+class RecvDesc:
+    buf: str
+    peer: Peer
+    tag: int
+    threshold: int = -1
+    region: Optional[Tuple[slice, ...]] = None
+    # How to deposit into the destination buffer: "replace" or "add"
+    # ("add" is the Faces gather-scatter sum deposit).
+    mode: str = "replace"
+
+
+@dataclasses.dataclass
+class CollDesc:
+    """A deferred collective (beyond-paper extension, §DESIGN 4)."""
+
+    op: str  # all_gather | reduce_scatter | all_reduce | all_to_all | ppermute
+    buf: str
+    out: str
+    axis: Any  # mesh axis name or tuple
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    threshold: int = -1
+
+
+@dataclasses.dataclass
+class StartDesc:
+    batch: int  # index of the batch this start triggers
+    threshold: int = -1
+
+
+@dataclasses.dataclass
+class WaitDesc:
+    batch: int
+    expected: int = -1  # completion-counter target
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferSpec:
+    """Global-view buffer declaration for a queue program."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: Any
+    # PartitionSpec entries (axis names / None) for the global array.
+    pspec: Tuple[Any, ...] = ()
+
+
+Descriptor = Any  # union of the above

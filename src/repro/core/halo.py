@@ -1,0 +1,283 @@
+"""Faces — the paper's microbenchmark pattern as an ST program.
+
+Faces (paper §V-A) is the nearest-neighbor pattern of CORAL-2 Nekbone:
+each rank owns a 3-D block of spectral-element data and exchanges the
+**faces (6), edges (12) and corners (8)** of its block with up to 26
+neighbors, then *adds* the received contributions into its own boundary
+(direct-stiffness summation).  The timed inner loop is:
+
+1. pre-post receives;            (enqueue_recv ×26)
+2. pack boundary slabs;          (pack kernels — Pallas or jnp)
+3. initiate sends;               (enqueue_send ×26 + one enqueue_start)
+4. interior compute (overlap);   (enqueue_kernel)
+5. wait for messages;            (enqueue_wait)
+6. unpack-and-add.               (unpack kernels)
+
+This module builds that inner loop as an :class:`STQueue` program over a
+3-D device grid, with the paper's variants selectable:
+
+* ``engine``: ``fused`` (ST — one dispatch) vs ``host`` (baseline —
+  per-op dispatch + host sync; Fig. 1);
+* ``granularity``: ``direct26`` (paper: one message per neighbor) or
+  ``staged3`` (beyond-paper: three axis sweeps, 6 larger messages, with
+  corner/edge data forwarded through already-updated ghosts);
+* ``batched``: one ``start`` for all messages (paper's batching) or one
+  ``start`` per message (models unbatched triggering);
+* ``pack``: ``jnp`` slicing or the Pallas ``halo_pack`` kernel.
+
+A pure-NumPy oracle (`faces_oracle`) computes the same update globally
+for correctness tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .descriptors import GridOffsetPeer
+from .queue import STQueue, STProgram
+
+AXES3 = ("gx", "gy", "gz")
+
+# all 26 neighbor direction vectors, deterministic order: faces first,
+# then edges, then corners (paper packs/sends in this order).
+DIRECTIONS: Tuple[Tuple[int, int, int], ...] = tuple(
+    sorted(
+        (d for d in itertools.product((-1, 0, 1), repeat=3) if any(d)),
+        key=lambda d: (sum(map(abs, d)), d),
+    )
+)
+FACES = tuple(d for d in DIRECTIONS if sum(map(abs, d)) == 1)
+EDGES = tuple(d for d in DIRECTIONS if sum(map(abs, d)) == 2)
+CORNERS = tuple(d for d in DIRECTIONS if sum(map(abs, d)) == 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class FacesConfig:
+    grid: Tuple[int, int, int] = (2, 2, 2)   # device grid (gx, gy, gz)
+    points: Tuple[int, int, int] = (16, 16, 16)  # local block points
+    dtype: str = "float32"
+    granularity: str = "direct26"  # direct26 | staged3
+    batched: bool = True           # one start per batch of sends
+    pack: str = "jnp"              # jnp | pallas
+    periodic: bool = False
+    interior_compute: bool = True  # include the overlap kernel (step 4)
+
+    @property
+    def n_ranks(self) -> int:
+        gx, gy, gz = self.grid
+        return gx * gy * gz
+
+
+def _slab_index(side: int, n: int) -> Tuple[slice, ...]:
+    """Boundary slab index along one axis: -1 → first plane, +1 → last,
+    0 → everything."""
+    if side == -1:
+        return slice(0, 1)
+    if side == 1:
+        return slice(n - 1, n)
+    return slice(0, n)
+
+
+def _region_for(direction: Tuple[int, int, int], points) -> Tuple[slice, ...]:
+    return tuple(_slab_index(s, n) for s, n in zip(direction, points))
+
+
+def _slab_shape(direction, points) -> Tuple[int, ...]:
+    return tuple(1 if s else n for s, n in zip(direction, points))
+
+
+def _make_pack_fn(region, pack_mode: str):
+    if pack_mode == "pallas":
+        from repro.kernels import ops as kops
+
+        def pack(u):  # u local view: (1,1,1,px,py,pz)
+            return kops.halo_pack(u[0, 0, 0], region)[None, None, None]
+    else:
+        def pack(u):
+            return u[0, 0, 0][region][None, None, None]
+    return pack
+
+
+def _make_unpack_fn(region, pack_mode: str):
+    if pack_mode == "pallas":
+        from repro.kernels import ops as kops
+
+        def unpack(u, msg):
+            return kops.halo_unpack_add(u[0, 0, 0], msg[0, 0, 0], region)[None, None, None]
+    else:
+        def unpack(u, msg):
+            core = u[0, 0, 0]
+            core = core.at[region].add(msg[0, 0, 0])
+            return core[None, None, None]
+    return unpack
+
+
+def _interior_fn(u):
+    """Step-4 overlap kernel: a cheap local stencil on the interior."""
+    core = u[0, 0, 0]
+    smoothed = core + 0.125 * (
+        jnp.roll(core, 1, 0) + jnp.roll(core, -1, 0)
+        + jnp.roll(core, 1, 1) + jnp.roll(core, -1, 1)
+        + jnp.roll(core, 1, 2) + jnp.roll(core, -1, 2)
+        - 6.0 * core
+    )
+    return smoothed[None, None, None]
+
+
+def build_faces_program(cfg: FacesConfig, mesh) -> STProgram:
+    """Build the Faces inner-loop as an ST program on a (gx,gy,gz) mesh."""
+    gx, gy, gz = cfg.grid
+    px, py, pz = cfg.points
+    dtype = np.dtype(cfg.dtype)
+    q = STQueue(mesh, name="faces")
+
+    gshape = (gx, gy, gz, px, py, pz)
+    q.buffer("u", gshape, dtype, pspec=AXES3)
+
+    dirs = DIRECTIONS if cfg.granularity == "direct26" else FACES
+    msg_in, msg_out = {}, {}
+    for i, d in enumerate(dirs):
+        sshape = _slab_shape(d, cfg.points)
+        msg_out[d] = q.buffer(f"out{i}", (gx, gy, gz, *sshape), dtype, pspec=AXES3)
+        msg_in[d] = q.buffer(f"in{i}", (gx, gy, gz, *sshape), dtype, pspec=AXES3)
+
+    if cfg.granularity == "direct26":
+        _emit_direct26(q, cfg, msg_in, msg_out)
+    elif cfg.granularity == "staged3":
+        _emit_staged3(q, cfg, msg_in, msg_out)
+    else:
+        raise ValueError(cfg.granularity)
+
+    return q.build(name=f"faces_{cfg.granularity}")
+
+
+def _emit_direct26(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
+    dirs = DIRECTIONS
+    # 2. pack kernels (paper step 2; packs precede sends in stream order)
+    for i, d in enumerate(dirs):
+        region = _region_for(d, cfg.points)
+        q.enqueue_kernel(_make_pack_fn(region, cfg.pack), ["u"], [msg_out[d]],
+                         name=f"pack{i}")
+    if cfg.batched:
+        # 1+3. pre-post all receives, then all sends, one trigger for the
+        # whole batch (the paper's batching semantics — one writeValue).
+        for i, d in enumerate(dirs):
+            peer = GridOffsetPeer(AXES3, tuple(-x for x in d), cfg.periodic)
+            q.enqueue_recv(msg_in[d], peer, tag=i)
+        for i, d in enumerate(dirs):
+            q.enqueue_send(msg_out[d], GridOffsetPeer(AXES3, d, cfg.periodic), tag=i)
+        q.enqueue_start()
+    else:
+        # unbatched: one writeValue (start) per message
+        for i, d in enumerate(dirs):
+            peer = GridOffsetPeer(AXES3, tuple(-x for x in d), cfg.periodic)
+            q.enqueue_recv(msg_in[d], peer, tag=i)
+            q.enqueue_send(msg_out[d], GridOffsetPeer(AXES3, d, cfg.periodic), tag=i)
+            q.enqueue_start()
+    # 4. interior compute overlapping communication (paper step 4)
+    if cfg.interior_compute:
+        q.enqueue_kernel(_interior_fn, ["u"], ["u"], name="interior")
+    # 5. wait (paper step 5)
+    q.enqueue_wait()
+    # 6. unpack-and-add (paper step 6)
+    for i, d in enumerate(dirs):
+        region = _region_for(tuple(-x for x in d), cfg.points)
+        q.enqueue_kernel(_make_unpack_fn(region, cfg.pack),
+                         ["u", msg_in[d]], ["u"], name=f"unpack{i}")
+
+
+def _emit_staged3(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
+    """Beyond-paper: three axis sweeps.  Each sweep exchanges the two
+    faces along one axis; because each sweep reads the ghost-updated
+    block, edge and corner contributions propagate through the stages
+    (standard staged halo).  6 messages instead of 26."""
+    for stage, axis in enumerate((0, 1, 2)):
+        dirs = [d for d in FACES if d[axis] != 0]
+        for d in dirs:
+            i = FACES.index(d)
+            peer = GridOffsetPeer(AXES3, tuple(-x for x in d), cfg.periodic)
+            q.enqueue_recv(msg_in[d], peer, tag=100 * stage + i)
+        for d in dirs:
+            i = FACES.index(d)
+            region = _region_for(d, cfg.points)
+            q.enqueue_kernel(_make_pack_fn(region, cfg.pack), ["u"], [msg_out[d]],
+                             name=f"pack_s{stage}_{i}")
+        for d in dirs:
+            i = FACES.index(d)
+            q.enqueue_send(msg_out[d], GridOffsetPeer(AXES3, d, cfg.periodic),
+                           tag=100 * stage + i)
+        q.enqueue_start()
+        if cfg.interior_compute and stage == 0:
+            q.enqueue_kernel(_interior_fn, ["u"], ["u"], name="interior")
+        q.enqueue_wait()
+        for d in dirs:
+            region = _region_for(tuple(-x for x in d), cfg.points)
+            q.enqueue_kernel(_make_unpack_fn(region, cfg.pack),
+                             ["u", msg_in[d]], ["u"], name=f"unpack_s{stage}")
+
+
+# --------------------------------------------------------------------------
+# NumPy oracle
+# --------------------------------------------------------------------------
+
+
+def faces_oracle(u: np.ndarray, cfg: FacesConfig) -> np.ndarray:
+    """Reference update for one inner iteration, computed globally.
+
+    ``u`` has shape (gx, gy, gz, px, py, pz).  Mirrors `direct26`
+    semantics: interior stencil (if enabled) then the 26-direction
+    boundary-sum, using the *pre-exchange* packed values (all packs
+    happen before the interior kernel in stream order).
+    """
+    u = np.asarray(u, dtype=np.dtype(cfg.dtype))
+    gx, gy, gz = cfg.grid
+    out = u.copy()
+
+    # packed messages are extracted from the original field
+    packed = {
+        d: u[(slice(None),) * 3 + _region_for(d, cfg.points)].copy()
+        for d in DIRECTIONS
+    }
+
+    if cfg.interior_compute:
+        core = out
+        sm = core.copy()
+        for ax in (3, 4, 5):
+            sm += 0.125 * (np.roll(core, 1, ax) + np.roll(core, -1, ax))
+        sm -= 0.125 * 6.0 * core
+        out = sm
+
+    for d in DIRECTIONS:
+        # contribution sent by neighbor at -d arrives at my -d... each
+        # rank r receives, from neighbor r - d, that neighbor's +d face,
+        # deposited into r's -d region.  Global shift of packed slabs:
+        msg = packed[d]
+        shifted = np.zeros_like(msg)
+        src = [slice(None)] * 6
+        dst = [slice(None)] * 6
+        ok = True
+        for ax, delta, n in zip(range(3), d, (gx, gy, gz)):
+            if delta == 0:
+                continue
+            if cfg.periodic:
+                shifted_axis = None  # handled below with np.roll
+            else:
+                if delta > 0:
+                    src[ax] = slice(0, n - delta)
+                    dst[ax] = slice(delta, n)
+                else:
+                    src[ax] = slice(-delta, n)
+                    dst[ax] = slice(0, n + delta)
+        if cfg.periodic:
+            shifted = np.roll(msg, shift=d, axis=(0, 1, 2))
+        else:
+            shifted[tuple(dst)] = msg[tuple(src)]
+        region = _region_for(tuple(-x for x in d), cfg.points)
+        out[(slice(None),) * 3 + region] += shifted
+    return out

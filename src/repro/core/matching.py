@@ -1,0 +1,176 @@
+"""Static two-sided message matching.
+
+MPI two-sided semantics normally require runtime matching of
+(source, tag, communicator) against posted receives — the part of the
+paper's design that Slingshot 11 could *not* offload (no triggered
+receives) and that forced the per-process progress thread.
+
+The ST interface forbids ``MPI_ANY_SOURCE`` / ``MPI_ANY_TAG``
+(paper §III-D), which makes the match function *static*: every send's
+peer and tag are known when the program is built.  On TPU we exploit
+this fully — matching happens **at trace time**, and each matched
+(send, recv) pair lowers to one ``ppermute`` channel.  There is no
+runtime matching engine and therefore no progress thread; the paper's
+progress-thread cost reappears only in the host-orchestrated engine as
+per-descriptor dispatch overhead.
+
+Matching rules (mirroring MPI ordering guarantees):
+
+* within one trigger batch, sends and recvs with equal tags match in
+  FIFO order (non-overtaking);
+* a send with peer ``OffsetPeer(axis, +d)`` matches a recv with peer
+  ``OffsetPeer(axis, -d)`` (the receiver names where the data comes
+  *from*); same for grid offsets;
+* ``PairListPeer`` sends/recvs match when their (src → dst) pair sets
+  are identical;
+* unmatched descriptors inside a batch are a program error, raised at
+  build time — the paper's equivalent would be a hang.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, List, Optional, Sequence, Tuple
+
+from .descriptors import (
+    CollDesc,
+    GridOffsetPeer,
+    OffsetPeer,
+    PairListPeer,
+    RecvDesc,
+    SendDesc,
+    perm_for,
+)
+
+
+@dataclasses.dataclass
+class Channel:
+    """A matched (send, recv) pair lowered to one ppermute channel."""
+
+    src_buf: str
+    dst_buf: str
+    axis: Any  # axis name or tuple of axis names
+    peer: Any  # the *send-side* peer spec (canonical direction)
+    tag: int
+    send_region: Optional[Tuple[slice, ...]]
+    recv_region: Optional[Tuple[slice, ...]]
+    mode: str  # replace | add
+
+    def perm(self, mesh_shape: dict) -> Sequence[Tuple[int, int]]:
+        return perm_for(self.peer, mesh_shape)[1]
+
+
+class MatchError(RuntimeError):
+    pass
+
+
+def _peer_key(peer) -> Tuple:
+    """Canonical direction key: send(+d) and recv(-d) share a key."""
+    if isinstance(peer, OffsetPeer):
+        return ("off", peer.axis, peer.delta, peer.periodic)
+    if isinstance(peer, GridOffsetPeer):
+        return ("grid", peer.axes, peer.deltas, peer.periodic)
+    if isinstance(peer, PairListPeer):
+        return ("pairs", peer.axis, tuple(sorted(peer.pairs)))
+    raise TypeError(f"unknown peer: {peer!r}")
+
+
+def _recv_key_as_send(peer) -> Tuple:
+    """Key a recv descriptor under the *sender's* direction."""
+    if isinstance(peer, (OffsetPeer, GridOffsetPeer)):
+        return _peer_key(peer.inverse())
+    return _peer_key(peer)
+
+
+def match_batch(
+    sends: Sequence[SendDesc], recvs: Sequence[RecvDesc]
+) -> List[Channel]:
+    """Match one trigger batch's sends against its recvs (FIFO per key)."""
+    recv_queues: dict = defaultdict(list)
+    for r in recvs:
+        recv_queues[(_recv_key_as_send(r.peer), r.tag)].append(r)
+
+    channels: List[Channel] = []
+    for s in sends:
+        key = (_peer_key(s.peer), s.tag)
+        q = recv_queues.get(key)
+        if not q:
+            raise MatchError(
+                f"unmatched ST send: buf={s.buf!r} tag={s.tag} peer={s.peer} "
+                f"(no posted receive in batch; ST forbids wildcards so this "
+                f"would hang at runtime)"
+            )
+        r = q.pop(0)
+        axis = (
+            s.peer.axis
+            if isinstance(s.peer, (OffsetPeer, PairListPeer))
+            else s.peer.axes
+        )
+        channels.append(
+            Channel(
+                src_buf=s.buf,
+                dst_buf=r.buf,
+                axis=axis,
+                peer=s.peer,
+                tag=s.tag,
+                send_region=s.region,
+                recv_region=r.region,
+                mode=r.mode,
+            )
+        )
+
+    leftovers = [r for q in recv_queues.values() for r in q]
+    if leftovers:
+        r = leftovers[0]
+        raise MatchError(
+            f"unmatched ST recv: buf={r.buf!r} tag={r.tag} peer={r.peer} "
+            f"({len(leftovers)} receive(s) never matched by a send)"
+        )
+    return channels
+
+
+@dataclasses.dataclass
+class Batch:
+    """Everything triggered by one `start` (paper: one writeValue)."""
+
+    index: int
+    kernels_before: List[Any]  # KernelDescs enqueued before this start
+    channels: List[Channel]
+    colls: List[CollDesc]
+    waited: bool = False
+
+
+def validate_program_order(descs: Sequence[Any]) -> None:
+    """Queue-level FIFO invariants (raised at build, not at run).
+
+    * every send/recv/coll must be covered by a later `start`;
+    * `wait` must reference a batch that has a `start`;
+    * thresholds must be monotonically non-decreasing (DWQ contract).
+    """
+    from .descriptors import StartDesc, WaitDesc  # local to avoid cycle
+
+    open_comm = 0
+    started = 0
+    waits_seen = 0
+    last_threshold = 0
+    for d in descs:
+        if isinstance(d, (SendDesc, RecvDesc, CollDesc)):
+            open_comm += 1
+            if d.threshold >= 0 and d.threshold < last_threshold:
+                raise MatchError("descriptor thresholds must be monotone")
+            last_threshold = max(last_threshold, d.threshold)
+        elif isinstance(d, StartDesc):
+            started += 1
+            open_comm = 0
+        elif isinstance(d, WaitDesc):
+            waits_seen += 1
+            if waits_seen > started:
+                raise MatchError(
+                    "MPIX_Enqueue_wait before any matching MPIX_Enqueue_start"
+                )
+    if open_comm:
+        raise MatchError(
+            f"{open_comm} enqueued communication op(s) not covered by an "
+            f"MPIX_Enqueue_start — they would never trigger"
+        )

@@ -1,0 +1,263 @@
+"""STQueue — the ``MPIX_Queue`` analogue and the ST enqueue API.
+
+Maps the paper's proposed interface (Fig. 4/5) onto JAX:
+
+=====================   =====================================================
+Paper                   Here
+=====================   =====================================================
+MPIX_Create_queue       ``STQueue(mesh, ...)`` / ``create_queue(...)``
+MPIX_Free_queue         ``queue.free()`` (resource bookkeeping + reuse guard)
+MPIX_Enqueue_send       ``queue.enqueue_send(buf, peer, tag)``
+MPIX_Enqueue_recv       ``queue.enqueue_recv(buf, peer, tag)``
+MPIX_Enqueue_start      ``queue.enqueue_start()``
+MPIX_Enqueue_wait       ``queue.enqueue_wait()``
+(kernel launch)         ``queue.enqueue_kernel(fn, reads, writes)``
+(extension)             ``queue.enqueue_collective(op, buf, out, axis)``
+=====================   =====================================================
+
+All enqueue operations are **non-blocking descriptor appends** — nothing
+touches a device.  ``build()`` performs trace-time matching and returns
+an immutable :class:`STProgram`; the two engines
+(:mod:`.engine_fused`, :mod:`.engine_host`) execute it.
+
+Semantics preserved from the paper:
+
+* FIFO execution of enqueued operations per queue;
+* batching: one ``start`` triggers every comm op enqueued since the
+  previous ``start`` (one writeValue per batch, not per op);
+* ``wait`` blocks only the *stream* (in the fused engine, a data-
+  dependency gate; the host never blocks), and host-level ``MPI_Wait``
+  style blocking exists separately (``engine_host`` sync points);
+* no wildcards — matching is static (see :mod:`.matching`);
+* a queue may be reused across iterations (the program re-executes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .counters import CompletionCounter, TriggerCounter
+from .descriptors import (
+    BufferSpec,
+    CollDesc,
+    KernelDesc,
+    RecvDesc,
+    SendDesc,
+    StartDesc,
+    WaitDesc,
+)
+from .matching import Batch, MatchError, match_batch, validate_program_order
+
+
+@dataclasses.dataclass
+class STProgram:
+    """Immutable, matched ST program ready for an engine."""
+
+    buffers: Dict[str, BufferSpec]
+    descriptors: Tuple[Any, ...]
+    batches: Tuple[Batch, ...]
+    mesh: Any  # jax.sharding.Mesh
+    name: str = "st_program"
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.batches)
+
+    @property
+    def n_channels(self) -> int:
+        return sum(len(b.channels) for b in self.batches)
+
+    def dispatch_count_host(self) -> int:
+        """How many separate device dispatches the host-orchestrated
+        (baseline / progress-thread) engine needs — the paper's
+        'expensive synchronization points'."""
+        n = 0
+        for d in self.descriptors:
+            if isinstance(d, KernelDesc):
+                n += 1
+        for b in self.batches:
+            n += len(b.channels) + len(b.colls)
+        return n
+
+    def dispatch_count_fused(self) -> int:
+        """The fused ST engine dispatches the whole program once."""
+        return 1
+
+
+class QueueError(RuntimeError):
+    pass
+
+
+class STQueue:
+    """Records an ST program (the MPIX_Queue + GPU-stream pair).
+
+    Parameters
+    ----------
+    mesh:
+        The ``jax.sharding.Mesh`` the program communicates over.  Plays
+        the role of the MPI communicator.
+    name:
+        Diagnostic name (shows up in lowered HLO metadata).
+    """
+
+    def __init__(self, mesh, name: str = "stq"):
+        self.mesh = mesh
+        self.name = name
+        self._descs: List[Any] = []
+        self._buffers: Dict[str, BufferSpec] = {}
+        self._trigger = TriggerCounter(name=f"{name}.trigger")
+        self._completion = CompletionCounter(name=f"{name}.completion")
+        self._freed = False
+        self._built: Optional[STProgram] = None
+
+    # -- buffer declaration -------------------------------------------------
+
+    def buffer(self, name: str, shape: Sequence[int], dtype=np.float32, pspec: Sequence[Any] = ()) -> str:
+        """Declare a named global buffer the program operates on."""
+        self._check_live()
+        if name in self._buffers:
+            raise QueueError(f"buffer {name!r} already declared")
+        self._buffers[name] = BufferSpec(name, tuple(shape), dtype, tuple(pspec))
+        self._built = None
+        return name
+
+    # -- enqueue API (paper Fig. 5) ------------------------------------------
+
+    def enqueue_kernel(
+        self, fn: Callable, reads: Sequence[str], writes: Sequence[str], name: str = "kernel"
+    ) -> None:
+        """Enqueue a compute kernel on the stream (non-blocking)."""
+        self._check_live()
+        for b in tuple(reads) + tuple(writes):
+            if b not in self._buffers:
+                raise QueueError(f"kernel touches undeclared buffer {b!r}")
+        self._descs.append(KernelDesc(fn, tuple(reads), tuple(writes), name))
+        self._built = None
+
+    def enqueue_send(self, buf: str, peer, tag: int, region=None) -> None:
+        """MPIX_Enqueue_send: deferred tagged send (returns immediately)."""
+        self._check_live()
+        self._check_buf(buf)
+        self._descs.append(
+            SendDesc(buf, peer, tag, threshold=self._trigger.next_threshold(), region=region)
+        )
+        self._built = None
+
+    def enqueue_recv(self, buf: str, peer, tag: int, region=None, mode: str = "replace") -> None:
+        """MPIX_Enqueue_recv: deferred tagged receive (returns immediately)."""
+        self._check_live()
+        self._check_buf(buf)
+        if mode not in ("replace", "add"):
+            raise QueueError("recv mode must be 'replace' or 'add'")
+        self._descs.append(
+            RecvDesc(buf, peer, tag, threshold=self._trigger.next_threshold(), region=region, mode=mode)
+        )
+        self._built = None
+
+    def enqueue_collective(self, op: str, buf: str, out: str, axis, **kwargs) -> None:
+        """Beyond-paper: enqueue a whole collective as one deferred op."""
+        self._check_live()
+        self._check_buf(buf)
+        if out not in self._buffers:
+            raise QueueError(f"collective writes undeclared buffer {out!r}")
+        if op not in ("all_gather", "reduce_scatter", "all_reduce", "all_to_all", "ppermute"):
+            raise QueueError(f"unknown collective {op!r}")
+        self._descs.append(
+            CollDesc(op, buf, out, axis, kwargs, threshold=self._trigger.next_threshold())
+        )
+        self._built = None
+
+    def enqueue_start(self) -> None:
+        """MPIX_Enqueue_start: one trigger (writeValue) for the batch of
+        every comm op enqueued since the previous start."""
+        self._check_live()
+        batch = self._trigger.record_start()
+        self._descs.append(StartDesc(batch=batch - 1, threshold=batch))
+        self._built = None
+
+    def enqueue_wait(self) -> None:
+        """MPIX_Enqueue_wait: stream-blocking completion gate (waitValue).
+        Non-blocking for the host."""
+        self._check_live()
+        n_started = self._trigger.scheduled
+        if n_started == 0:
+            raise QueueError("enqueue_wait before any enqueue_start")
+        self._descs.append(WaitDesc(batch=n_started - 1, expected=self._completion.record_op()))
+        self._built = None
+
+    def free(self) -> None:
+        """MPIX_Free_queue: releases the queue.  Caller is responsible for
+        having completed outstanding work (paper §III-A)."""
+        self._check_live()
+        self._freed = True
+
+    # -- build ---------------------------------------------------------------
+
+    def build(self, name: Optional[str] = None) -> STProgram:
+        """Trace-time matching + validation → immutable STProgram."""
+        self._check_live()
+        if self._built is not None:
+            return self._built
+        validate_program_order(self._descs)
+
+        batches: List[Batch] = []
+        pending_sends: List[SendDesc] = []
+        pending_recvs: List[RecvDesc] = []
+        pending_colls: List[CollDesc] = []
+        kernels_since_start: List[KernelDesc] = []
+        for d in self._descs:
+            if isinstance(d, KernelDesc):
+                kernels_since_start.append(d)
+            elif isinstance(d, SendDesc):
+                pending_sends.append(d)
+            elif isinstance(d, RecvDesc):
+                pending_recvs.append(d)
+            elif isinstance(d, CollDesc):
+                pending_colls.append(d)
+            elif isinstance(d, StartDesc):
+                channels = match_batch(pending_sends, pending_recvs)
+                batches.append(
+                    Batch(
+                        index=d.batch,
+                        kernels_before=list(kernels_since_start),
+                        channels=channels,
+                        colls=list(pending_colls),
+                    )
+                )
+                pending_sends, pending_recvs, pending_colls = [], [], []
+                kernels_since_start = []
+            elif isinstance(d, WaitDesc):
+                if d.batch < len(batches):
+                    batches[d.batch].waited = True
+
+        self._built = STProgram(
+            buffers=dict(self._buffers),
+            descriptors=tuple(self._descs),
+            batches=tuple(batches),
+            mesh=self.mesh,
+            name=name or self.name,
+        )
+        return self._built
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _check_live(self):
+        if self._freed:
+            raise QueueError("operation on freed MPIX_Queue (use-after-free)")
+
+    def _check_buf(self, buf: str):
+        if buf not in self._buffers:
+            raise QueueError(f"undeclared buffer {buf!r}")
+
+    @property
+    def n_descriptors(self) -> int:
+        return len(self._descs)
+
+
+def create_queue(mesh, name: str = "stq") -> STQueue:
+    """MPIX_Create_queue analogue (local operation, no communication)."""
+    return STQueue(mesh, name)

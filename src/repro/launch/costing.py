@@ -1,0 +1,196 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Calibrated roofline costing (companion to dryrun.py).
+
+``cost_analysis()`` on a scanned-layers program counts the loop body
+ONCE, undercounting FLOPs/bytes/collectives by ~n_layers.  This module
+compiles small **unrolled** variants and extrapolates:
+
+* ``unrolled`` mode (shallow/narrow archs): unroll the real depth — the
+  costs are exact.
+* ``calibrated`` mode (80-layer giants): unroll L₂ and L₄ layers
+  (L₄ = 2·L₂); per-layer cost = (C(L₄) − C(L₂)) / (L₄ − L₂); total =
+  C(L₂) + per_layer × (L − L₂).  Linear in depth by construction of the
+  stacks (every layer is structurally identical within a segment).
+
+Artifacts land in ``artifacts/costing/*.json``; benchmarks/roofline.py
+prefers them over the scanned dry-run numbers.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.dryrun import SKIPS
+from repro.launch.hlo_analysis import analyze_collectives, analyze_dots
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_bundle
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "costing")
+
+
+def _pattern_unit(cfg) -> int:
+    """Smallest depth that preserves the layer pattern (gemma 5:1 etc.).
+
+    Sparse-global patterns with a long period (hymba: global every 16)
+    are calibrated on local-only layers — the 2-of-32 global layers are
+    approximated as local ones (documented in EXPERIMENTS.md)."""
+    if cfg.global_every and cfg.global_every <= 8:
+        return cfg.global_every
+    return 1
+
+
+def _with_depth(cfg, L: int):
+    updates = dict(n_layers=L, scan_layers=False)
+    if cfg.enc_dec:
+        updates["n_enc_layers"] = L
+    if cfg.first_k_dense:
+        # calibrate the homogeneous MoE layer; the 3 dense layers are
+        # approximated as MoE layers (overestimates <5% of depth)
+        updates["first_k_dense"] = 0
+    if cfg.mtp_depth:
+        updates["mtp_depth"] = cfg.mtp_depth  # stays outside the depth scaling
+    return dataclasses.replace(cfg, **updates)
+
+
+def _compile_costs(cfg, shape, mesh):
+    bundle = build_bundle(cfg, shape, mesh)
+    lowered = bundle.lower()
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = analyze_collectives(hlo, mesh.devices.size)
+    dots = analyze_dots(hlo)
+    mem = {}
+    try:
+        m = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes"):
+            mem[attr] = int(getattr(m, attr))
+    except Exception:
+        pass
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "dot_flops": dots.total_flops,
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": colls.total_bytes,
+        "coll_by_kind": colls.bytes_by_kind,
+        "memory": mem,
+        "top_dots": dots.largest[:8],
+    }
+
+
+def _lin(c2, c4, L2, L4, L, key):
+    per_layer = (c4[key] - c2[key]) / (L4 - L2)
+    return c2[key] + per_layer * (L - L2), per_layer
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if (arch, shape_name) in SKIPS:
+        rec.update(status="skipped", reason=SKIPS[(arch, shape_name)])
+        _save(rec, save)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        unit = _pattern_unit(cfg)
+        L = cfg.n_layers
+        eff_L = L + (cfg.n_enc_layers if cfg.enc_dec else 0)
+        full_unroll = (eff_L <= 28 and cfg.d_model <= 4096) or eff_L <= 8
+
+        if full_unroll:
+            costs = _compile_costs(dataclasses.replace(
+                cfg, scan_layers=False), shape, mesh)
+            rec.update(status="ok", mode="unrolled",
+                       flops=costs["flops"], dot_flops=costs["dot_flops"],
+                       bytes=costs["bytes"],
+                       coll_bytes=costs["coll_bytes"],
+                       coll_by_kind=costs["coll_by_kind"],
+                       memory=costs["memory"], top_dots=costs["top_dots"])
+        else:
+            L2, L4 = 2 * unit, 4 * unit
+            c2 = _compile_costs(_with_depth(cfg, L2), shape, mesh)
+            c4 = _compile_costs(_with_depth(cfg, L4), shape, mesh)
+            out = {}
+            for key in ("flops", "dot_flops", "bytes", "coll_bytes"):
+                total, per_layer = _lin(c2, c4, L2, L4, L, key)
+                out[key] = total
+                out[f"{key}_per_layer"] = per_layer
+            kinds = {}
+            for k in set(c2["coll_by_kind"]) | set(c4["coll_by_kind"]):
+                a, b = c2["coll_by_kind"].get(k, 0.0), c4["coll_by_kind"].get(k, 0.0)
+                kinds[k] = a + (b - a) / (L4 - L2) * (L - L2)
+            rec.update(status="ok", mode=f"calibrated(L{L2},L{L4})",
+                       flops=out["flops"], dot_flops=out["dot_flops"],
+                       bytes=out["bytes"],
+                       coll_bytes=out["coll_bytes"], coll_by_kind=kinds,
+                       per_layer={k: out[f"{k}_per_layer"]
+                                  for k in ("flops", "dot_flops", "bytes",
+                                            "coll_bytes")},
+                       memory=c4["memory"], top_dots=c4["top_dots"])
+        rec["n_devices"] = int(mesh.devices.size)
+        rec["wall_s"] = round(time.time() - t0, 1)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-3000:])
+    _save(rec, save)
+    return rec
+
+
+def _save(rec, save):
+    if not save:
+        return
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(
+            ARTIFACTS, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"),
+            "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+            path = os.path.join(ARTIFACTS, f"{arch}__{shape}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                rec = json.load(open(path))
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[cached ] {arch} {shape} {rec['status']}", flush=True)
+                    results.append(rec)
+                    continue
+            rec = run_one(arch, shape, args.multi_pod)
+            extra = ""
+            if rec["status"] == "ok":
+                extra = (f"mode={rec['mode']} flops={rec['flops']:.3e} "
+                         f"coll={rec['coll_bytes']:.3e}B t={rec['wall_s']}s")
+            elif rec["status"] == "error":
+                extra = rec["error"][:140]
+            print(f"[{rec['status']:7s}] {arch} {shape} {extra}", flush=True)
+            results.append(rec)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"COSTING SUMMARY: {len(results)-n_err} ok/skip, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Parse compiled HLO text for roofline inputs.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but NOT
+collective traffic; this module extracts it from the post-SPMD optimized
+HLO (``compiled.as_text()``): every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` op's tensor
+bytes, bucketed by op kind.
+
+Byte conventions (per-device, estimates for the roofline term):
+* all-gather          — result bytes × (n−1)/n   (data received)
+* all-reduce          — 2 × operand bytes × (n−1)/n (ring RS+AG)
+* reduce-scatter      — operand bytes × (n−1)/n
+* all-to-all          — operand bytes × (n−1)/n
+* collective-permute  — operand bytes (one hop)
+
+`n` is the replica-group size parsed per op.  These are the standard
+ring-algorithm wire-byte counts; the ICI term divides by per-chip link
+bandwidth × usable links.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:%|ROOT\s+%?)?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    """Total bytes of a '(bf16[2,3], f32[4])' or 'bf16[2,3]' type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+            "total_bytes": self.total_bytes,
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        ids = [x for x in first.replace("{", "").split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def analyze_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    bytes_by = defaultdict(float)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _tensor_bytes(type_str)
+        n = _group_size(line, n_devices)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-gather":
+            wire = nbytes * frac  # result bytes are the gathered size
+        elif kind == "all-reduce":
+            wire = 2.0 * nbytes * frac
+        elif kind == "reduce-scatter":
+            wire = nbytes * frac
+        elif kind == "all-to-all":
+            wire = nbytes * frac
+        else:  # collective-permute
+            wire = float(nbytes)
+        bytes_by[kind] += wire
+        count_by[kind] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\b", hlo_text))
+
+
+# --------------------------------------------------------------------------
+# dot-op FLOP accounting (exact MXU work, per device)
+# --------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+_DOT_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\][^=]*"
+    r"\bdot\(\s*(%[\w.\-]+)\s*,")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?[\w.\-]+\s*\(.*\)\s*->.*\{")
+
+
+@dataclasses.dataclass
+class DotStats:
+    total_flops: float
+    n_dots: int
+    largest: List[Tuple[float, str]]  # (flops, descriptor) top entries
+
+
+def analyze_dots(hlo_text: str, top_k: int = 12) -> DotStats:
+    """Sum 2·(result elements)·(contraction size) over every dot op.
+
+    Shapes in post-SPMD HLO are per-device shards, so the sum is the
+    per-device MXU FLOPs — the roofline compute-term numerator.  Operand
+    shapes are resolved from instruction definitions, scoped per
+    computation (names repeat across computations).
+    """
+    total = 0.0
+    entries: List[Tuple[float, str]] = []
+    scope: Dict[str, List[int]] = {}
+    for line in hlo_text.splitlines():
+        if _COMP_START_RE.match(line):
+            scope = {}
+        dm = _DEF_RE.match(line)
+        if dm:
+            dims = [int(x) for x in dm.group(3).split(",") if x]
+            scope[dm.group(1)] = dims
+        dot = _DOT_LINE_RE.match(line)
+        if not dot or " dot(" not in line:
+            continue
+        cm = _LHS_CONTRACT_RE.search(line)
+        if not cm:
+            continue
+        res_dims = [int(x) for x in dot.group(3).split(",") if x]
+        lhs_dims = scope.get(dot.group(4), [])
+        contract = [int(x) for x in cm.group(1).split(",") if x]
+        k = 1
+        for c in contract:
+            if c < len(lhs_dims):
+                k *= lhs_dims[c]
+        res = 1
+        for d in res_dims:
+            res *= d
+        flops = 2.0 * res * k
+        total += flops
+        entries.append((flops, f"{dot.group(2)}[{dot.group(3)}] k={k}"))
+    entries.sort(key=lambda e: e[0], reverse=True)
+    return DotStats(total, len(entries), entries[:top_k])

@@ -1,0 +1,245 @@
+"""Step builders: train / prefill / serve with resolved shardings.
+
+Bridges the model zoo and the launcher: for a (ModelConfig, ShapeConfig,
+Mesh) triple this module resolves every pytree (params, optimizer state,
+batch, caches) to ``NamedSharding`` via the logical rules, and returns
+jit-ready step callables plus ShapeDtypeStruct input stand-ins for the
+dry-run (``.lower(...).compile()`` with zero allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.synthetic import make_batch_specs
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, linear_warmup_cosine
+from repro.parallel import (
+    RULES_DECODE,
+    RULES_LONG_DECODE,
+    RULES_TRAIN,
+    LogicalRules,
+    logical_spec,
+    logical_spec_sized,
+    sharding_ctx,
+)
+
+
+def rules_for(shape: ShapeConfig) -> LogicalRules:
+    if shape.kind == "train" or shape.kind == "prefill":
+        return RULES_TRAIN if shape.kind == "train" else RULES_DECODE
+    return RULES_LONG_DECODE if shape.global_batch == 1 else RULES_DECODE
+
+
+def _tree_shardings(sds_tree, axes_tree, rules: LogicalRules, mesh: Mesh):
+    """Shape-aware sharding resolution (indivisible dims fall back)."""
+    return jax.tree.map(
+        lambda sd, axes: NamedSharding(
+            mesh, logical_spec_sized(sd.shape, axes, rules, mesh)),
+        sds_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and not any(
+            hasattr(e, "shape") for e in x),
+    )
+
+
+def _sds_like(shape_dtype_tree, shardings_tree):
+    return jax.tree.map(
+        lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+        shape_dtype_tree, shardings_tree)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the launcher / dry-run needs for one (arch × shape)."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    rules: LogicalRules
+    model: Model
+    step_fn: Callable          # jit-able python callable
+    in_shardings: Any
+    out_shardings: Any
+    input_sds: Tuple           # ShapeDtypeStructs for .lower(*input_sds)
+
+    def lower(self):
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings)
+        with self.mesh:
+            return jitted.lower(*self.input_sds)
+
+
+# --------------------------------------------------------------------------
+# train
+# --------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     opt: Optional[AdamWConfig] = None,
+                     total_steps: int = 10_000) -> StepBundle:
+    assert shape.kind == "train"
+    rules = RULES_TRAIN
+    model = Model(cfg)
+    opt = opt or AdamWConfig()
+
+    params_sd, axes = model.abstract_init()
+    param_shardings = _tree_shardings(params_sd, axes, rules, mesh)
+    opt_sd = jax.eval_shape(lambda p: adamw_init(p, opt), params_sd)
+    opt_shardings = {
+        "m": param_shardings, "v": param_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+    batch_axes = make_batch_specs(cfg, shape)
+    raw_sds = model.input_specs(shape)
+    batch_shardings = {
+        k: NamedSharding(mesh, logical_spec_sized(
+            raw_sds[k].shape, batch_axes[k], rules, mesh))
+        for k in raw_sds
+    }
+    batch_sds = {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=batch_shardings[k])
+        for k, v in raw_sds.items()
+    }
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            with sharding_ctx(rules, mesh):
+                return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = linear_warmup_cosine(opt_state["step"], base_lr=opt.lr,
+                                  warmup_steps=max(total_steps // 50, 10),
+                                  total_steps=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, opt, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    metrics_sh = None  # let jit infer (scalars)
+    in_sh = (param_shardings, opt_shardings, batch_shardings)
+    out_sh = (param_shardings, opt_shardings, metrics_sh)
+
+    input_sds = (
+        _sds_like(params_sd, param_shardings),
+        _sds_like(opt_sd, opt_shardings),
+        batch_sds,
+    )
+    return StepBundle(cfg, shape, mesh, rules, model, train_step,
+                      in_sh, out_sh, input_sds)
+
+
+# --------------------------------------------------------------------------
+# prefill / decode
+# --------------------------------------------------------------------------
+
+
+def _cache_shardings(caches_sd, model: Model, rules: LogicalRules, mesh: Mesh):
+    axes = model.cache_axes()
+    return jax.tree.map(
+        lambda sd, a: NamedSharding(
+            mesh, logical_spec_sized(sd.shape, a, rules, mesh)),
+        caches_sd, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and not any(
+            hasattr(e, "shape") for e in x))
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       serve_window: int = 0) -> StepBundle:
+    assert shape.kind == "prefill"
+    rules = RULES_DECODE
+    model = Model(cfg)
+
+    params_sd, axes = model.abstract_init()
+    param_shardings = _tree_shardings(params_sd, axes, rules, mesh)
+
+    B, S = shape.global_batch, shape.seq_len
+    max_len = S + model._prefix_len()
+    caches_sd = jax.eval_shape(lambda: model.init_caches(B, max_len))
+    cache_shardings = _cache_shardings(caches_sd, model, rules, mesh)
+
+    batch_axes = make_batch_specs(cfg, shape)
+    raw_sds = model.input_specs(shape)
+    batch_shardings = {
+        k: NamedSharding(mesh, logical_spec_sized(
+            raw_sds[k].shape, batch_axes[k], rules, mesh))
+        for k in raw_sds
+    }
+    batch_sds = {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=batch_shardings[k])
+        for k, v in raw_sds.items()
+    }
+
+    def prefill_step(params, batch, caches):
+        with sharding_ctx(rules, mesh):
+            return model.prefill(params, batch, caches,
+                                 serve_window=serve_window)
+
+    in_sh = (param_shardings, batch_shardings, cache_shardings)
+    out_sh = (NamedSharding(mesh, logical_spec_sized(
+                  (B, cfg.vocab), ("batch", "act_vocab"), rules, mesh)),
+              _prefill_out_cache_shardings(cache_shardings))
+    input_sds = (
+        _sds_like(params_sd, param_shardings),
+        batch_sds,
+        _sds_like(caches_sd, cache_shardings),
+    )
+    return StepBundle(cfg, shape, mesh, rules, model, prefill_step,
+                      in_sh, out_sh, input_sds)
+
+
+def _prefill_out_cache_shardings(cache_shardings):
+    return cache_shardings
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     serve_window: int = 0) -> StepBundle:
+    assert shape.kind == "decode"
+    rules = rules_for(shape)
+    model = Model(cfg)
+
+    params_sd, axes = model.abstract_init()
+    param_shardings = _tree_shardings(params_sd, axes, rules, mesh)
+
+    B, S = shape.global_batch, shape.seq_len
+    caches_sd = jax.eval_shape(lambda: model.init_caches(B, S))
+    cache_shardings = _cache_shardings(caches_sd, model, rules, mesh)
+
+    token_sh = NamedSharding(mesh, logical_spec_sized((B,), ("batch",),
+                                                       rules, mesh))
+    token_sds = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=token_sh)
+
+    def serve_step(params, caches, token):
+        with sharding_ctx(rules, mesh):
+            return model.decode_step(params, caches, token,
+                                     serve_window=serve_window)
+
+    logits_sh = NamedSharding(mesh, logical_spec_sized(
+        (B, cfg.vocab), ("batch", "act_vocab"), rules, mesh))
+    in_sh = (param_shardings, cache_shardings, token_sh)
+    out_sh = (logits_sh, cache_shardings)
+    input_sds = (
+        _sds_like(params_sd, param_shardings),
+        _sds_like(caches_sd, cache_shardings),
+        token_sds,
+    )
+    return StepBundle(cfg, shape, mesh, rules, model, serve_step,
+                      in_sh, out_sh, input_sds)
+
+
+def build_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 **kwargs) -> StepBundle:
+    serve_window = cfg.serve_window if (shape.name == "long_500k") else 0
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, **kwargs)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, serve_window=serve_window,
+                                  **kwargs)
+    return build_serve_step(cfg, shape, mesh, serve_window=serve_window,
+                            **kwargs)

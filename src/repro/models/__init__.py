@@ -1,0 +1,6 @@
+"""Model zoo: one facade class for all assigned architectures."""
+from .model import Model
+from .nn import Boxed, unbox
+from .transformer import plan_segments
+
+__all__ = ["Model", "Boxed", "unbox", "plan_segments"]

@@ -1,0 +1,57 @@
+"""Modality frontend *stubs* (the one allowed carve-out, per brief).
+
+``[audio]``/``[vlm]`` architectures get their conv/ViT feature extractor
+stubbed: ``input_specs()`` supplies precomputed frame/patch embeddings of
+the right shape, and this module provides only the *projector* that maps
+them into the backbone's embedding space (which IS part of the language
+model and is implemented + trained).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .nn import param
+
+
+def init_frontend(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.frontend == "vision":
+        ks = jax.random.split(key, 2)
+        # InternVL-style 2-layer MLP projector
+        return {
+            "proj_in": param(ks[0], (cfg.frontend_dim, cfg.d_model),
+                             ("frontend", "embed"), dt),
+            "proj_out": param(ks[1], (cfg.d_model, cfg.d_model),
+                              ("embed", "embed"), dt),
+        }
+    if cfg.frontend == "audio":
+        # whisper stub supplies post-conv d_model embeddings; learn a
+        # linear adapter (identity-scale init) + use sinusoidal positions
+        return {
+            "proj_in": param(key, (cfg.frontend_dim, cfg.d_model),
+                             ("frontend", "embed"), dt, scale=0.01),
+        }
+    return {}
+
+
+def apply_frontend(p, embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Project stub embeddings into backbone space.  [B, T, F] → [B, T, D]."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embeds.astype(dt)
+    x = jnp.einsum("btf,fd->btd", x, p["proj_in"].astype(dt))
+    if "proj_out" in p:
+        x = jnp.einsum("btd,de->bte", jax.nn.gelu(x), p["proj_out"].astype(dt))
+    return x
+
+
+def sinusoidal_positions(n: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,300 @@
+"""Model facade: init / train-loss / prefill / decode for every arch.
+
+One class serves all 10 assigned architectures; the config decides the
+trunk (segments), frontend, caches and heads.  The launcher lowers
+``train_step`` / ``prefill_step`` / ``serve_step`` built from these
+methods under pjit with shardings resolved from the logical-axes pytree
+this module returns alongside the params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.parallel import act_shard
+from . import transformer as tfm
+from .frontends import apply_frontend, init_frontend, sinusoidal_positions
+from .nn import (
+    apply_embedding,
+    apply_rmsnorm,
+    apply_unembed,
+    init_embedding,
+    init_rmsnorm,
+    init_unembed,
+    param,
+    unbox,
+)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key) -> Tuple[Dict, Dict]:
+        """Returns (params, logical_axes) — two aligned pytrees."""
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        boxed: Dict[str, Any] = {
+            "embed": init_embedding(ks[0], cfg),
+            "decoder": tfm.init_stack(ks[1], cfg, decoder=True),
+            "ln_final": init_rmsnorm(ks[2], cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "unembed": init_unembed(ks[3], cfg),
+        }
+        if cfg.enc_dec:
+            boxed["encoder"] = tfm.init_stack(ks[4], cfg, decoder=False)
+            boxed["ln_enc"] = init_rmsnorm(ks[4], cfg.d_model,
+                                           jnp.dtype(cfg.param_dtype))
+        if cfg.frontend != "none":
+            boxed["frontend"] = init_frontend(ks[5], cfg)
+        if cfg.n_meta_tokens:
+            boxed["meta"] = param(ks[6], (cfg.n_meta_tokens, cfg.d_model),
+                                  (None, "embed"), jnp.dtype(cfg.param_dtype))
+        if cfg.mtp_depth:
+            boxed["mtp"] = {
+                "proj": param(ks[7], (2 * cfg.d_model, cfg.d_model),
+                              ("embed", "embed"), jnp.dtype(cfg.param_dtype)),
+                "block": tfm.init_block(ks[7], cfg, "attn_mlp"),
+                "ln": init_rmsnorm(ks[7], cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            }
+        return unbox(boxed)
+
+    def abstract_init(self) -> Tuple[Dict, Dict]:
+        """(ShapeDtypeStruct params, logical axes) with zero allocation.
+
+        The axes pytree is static python captured during the eval_shape
+        trace (strings can't flow through eval_shape outputs)."""
+        store = {}
+
+        def f():
+            p, a = self.init(jax.random.PRNGKey(0))
+            store["axes"] = a
+            return p
+
+        params_sd = jax.eval_shape(f)
+        return params_sd, store["axes"]
+
+    # -- encoder (whisper) ------------------------------------------------------
+
+    def _encode(self, params, audio_embeds):
+        cfg = self.cfg
+        x = apply_frontend(params["frontend"], audio_embeds, cfg)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        x, _, _ = tfm.apply_stack(params["encoder"], x, cfg, decoder=False,
+                                  causal=False)
+        return apply_rmsnorm(params["ln_enc"], x, cfg)
+
+    # -- embedding of the decoder sequence --------------------------------------
+
+    def _embed_tokens(self, params, tokens, *, prefix_embeds=None):
+        cfg = self.cfg
+        x = apply_embedding(params["embed"], tokens, cfg)
+        parts = []
+        if cfg.n_meta_tokens:
+            meta = jnp.broadcast_to(
+                params["meta"].astype(x.dtype)[None],
+                (x.shape[0], cfg.n_meta_tokens, cfg.d_model))
+            parts.append(meta)
+        if prefix_embeds is not None:
+            parts.append(prefix_embeds.astype(x.dtype))
+        parts.append(x)
+        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else x
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)[None]
+        return x
+
+    def _prefix_len(self) -> int:
+        cfg = self.cfg
+        n = cfg.n_meta_tokens
+        if cfg.frontend == "vision":
+            n += cfg.frontend_tokens
+        return n
+
+    # -- train forward ------------------------------------------------------------
+
+    def loss(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        targets = batch["targets"]
+        B, S = tokens.shape
+
+        enc_out = None
+        prefix = None
+        if cfg.enc_dec:
+            enc_out = self._encode(params, batch["audio_embeds"])
+        if cfg.frontend == "vision":
+            prefix = apply_frontend(params["frontend"], batch["vision_embeds"], cfg)
+
+        x = self._embed_tokens(params, tokens, prefix_embeds=prefix)
+        P = self._prefix_len()
+        positions = jnp.arange(x.shape[1])
+        x, _, aux = tfm.apply_stack(params["decoder"], x, cfg, decoder=True,
+                                    causal=True, positions=positions,
+                                    enc_out=enc_out)
+        h = apply_rmsnorm(params["ln_final"], x, cfg)
+        h_text = act_shard(h[:, P:], "batch", "seq", None)
+        logits = apply_unembed(params["embed"], params.get("unembed", {}),
+                               h_text, cfg)
+        loss = _ce(logits, targets)
+        metrics = {"ce": loss}
+        if "lb_loss" in aux:
+            metrics["lb_loss"] = aux["lb_loss"]
+            loss = loss + 0.01 * aux["lb_loss"] / max(cfg.n_layers, 1)
+        if cfg.mtp_depth:
+            mtp_loss = self._mtp_loss(params, h_text, tokens, targets, positions[P:])
+            metrics["mtp_loss"] = mtp_loss
+            loss = loss + 0.3 * mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, tokens, targets, positions):
+        """DeepSeek MTP depth-1: predict t+2 from [h_t ; emb(target_t)]."""
+        cfg = self.cfg
+        p = params["mtp"]
+        emb_next = apply_embedding(params["embed"], targets, cfg)
+        hcat = jnp.concatenate([h, emb_next.astype(h.dtype)], axis=-1)
+        hm = jnp.einsum("bsd,de->bse", hcat, p["proj"].astype(h.dtype))
+        hm, _, _ = tfm.apply_block(p["block"], hm, cfg, "attn_mlp",
+                                   causal=True, positions=positions)
+        hm = apply_rmsnorm(p["ln"], hm, cfg)
+        logits = apply_unembed(params["embed"], params.get("unembed", {}),
+                               hm[:, :-1], cfg)
+        # target at depth 1 is token t+2 == targets shifted by one
+        return _ce(logits, targets[:, 1:])
+
+    def forward_logits(self, params, batch):
+        """Full-sequence logits (no cache) — test/debug path."""
+        cfg = self.cfg
+        enc_out = (self._encode(params, batch["audio_embeds"])
+                   if cfg.enc_dec else None)
+        prefix = (apply_frontend(params["frontend"], batch["vision_embeds"], cfg)
+                  if cfg.frontend == "vision" else None)
+        x = self._embed_tokens(params, batch["tokens"], prefix_embeds=prefix)
+        positions = jnp.arange(x.shape[1])
+        x, _, _ = tfm.apply_stack(params["decoder"], x, cfg, decoder=True,
+                                  causal=True, positions=positions,
+                                  enc_out=enc_out)
+        h = apply_rmsnorm(params["ln_final"], x, cfg)
+        return apply_unembed(params["embed"], params.get("unembed", {}),
+                             h[:, self._prefix_len():], cfg)
+
+    # -- serving ----------------------------------------------------------------
+
+    def init_caches(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        segs, pos = tfm.init_caches(cfg, batch, max_len)
+        out = {"segments": segs, "pos": pos}
+        if cfg.enc_dec:
+            out["enc_out"] = jnp.zeros(
+                (batch, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+
+    def cache_axes(self) -> Dict[str, Any]:
+        out = {"segments": tfm.cache_logical_axes(self.cfg), "pos": ()}
+        if self.cfg.enc_dec:
+            out["enc_out"] = ("batch", None, "act_embed")
+        return out
+
+    def prefill(self, params, batch, caches, *, serve_window: int = 0):
+        """Write the prompt into the caches; returns (last_logits, caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc_out = None
+        prefix = None
+        if cfg.enc_dec:
+            enc_out = self._encode(params, batch["audio_embeds"])
+        if cfg.frontend == "vision":
+            prefix = apply_frontend(params["frontend"], batch["vision_embeds"], cfg)
+        x = self._embed_tokens(params, tokens, prefix_embeds=prefix)
+        positions = jnp.arange(x.shape[1]) + caches["pos"]
+        x, new_segs, _ = tfm.apply_stack(
+            params["decoder"], x, cfg, decoder=True, causal=True,
+            positions=positions, caches=caches["segments"],
+            cache_pos=caches["pos"], serve_window=serve_window, enc_out=enc_out)
+        h = apply_rmsnorm(params["ln_final"], x, cfg)
+        logits = apply_unembed(params["embed"], params.get("unembed", {}),
+                               h[:, -1:], cfg)[:, 0]
+        out = {"segments": _merge_caches(caches["segments"], new_segs),
+               "pos": caches["pos"] + x.shape[1]}
+        if cfg.enc_dec:
+            out["enc_out"] = enc_out
+        return logits, out
+
+    def decode_step(self, params, caches, token, *, serve_window: int = 0):
+        """One-token decode against the cache.  token: [B] int32."""
+        cfg = self.cfg
+        x = apply_embedding(params["embed"], token[:, None], cfg)
+        if cfg.pos_embedding == "sinusoidal":
+            # sinusoidal embedding at the (traced) cache position
+            x = x + _sinusoid_at(caches["pos"], cfg.d_model, x.dtype)[None, None]
+        positions = caches["pos"][None]
+        x, new_segs, _ = tfm.apply_stack(
+            params["decoder"], x, cfg, decoder=True, causal=True,
+            positions=positions, caches=caches["segments"],
+            cache_pos=caches["pos"], serve_window=serve_window,
+            enc_out=caches.get("enc_out"))
+        h = apply_rmsnorm(params["ln_final"], x, cfg)
+        logits = apply_unembed(params["embed"], params.get("unembed", {}),
+                               h, cfg)[:, 0]
+        out = dict(caches)
+        out["segments"] = _merge_caches(caches["segments"], new_segs)
+        out["pos"] = caches["pos"] + 1
+        return logits, out
+
+    # -- dry-run input specs -------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if shape.kind == "train":
+                specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+            if cfg.enc_dec:
+                specs["audio_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+            if cfg.frontend == "vision":
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+            return specs
+        # decode: one token against a seq_len cache
+        return {"token": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def _merge_caches(old_segs: List, new_segs: List) -> List:
+    out = []
+    for o, n in zip(old_segs, new_segs):
+        if not n:
+            out.append(o)
+        else:
+            merged = dict(o)
+            for k, v in n.items():
+                merged[k] = v
+            out.append(merged)
+    return out
+
+
+def _sinusoid_at(pos, d, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _ce(logits, targets):
+    lg = act_shard(logits.astype(jnp.float32), "batch", "seq", "act_vocab")
+    lse = act_shard(jax.nn.logsumexp(lg, axis=-1), "batch", "seq")
+    gold = act_shard(
+        jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0],
+        "batch", "seq")
+    return jnp.mean(lse - gold)

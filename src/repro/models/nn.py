@@ -1,0 +1,435 @@
+"""Core NN building blocks (pure JAX, functional params).
+
+Params are nested dicts of ``Boxed(value, axes)`` leaves during init;
+``unbox`` splits them into a value pytree and a logical-axes pytree that
+the launcher maps to mesh shardings via :mod:`repro.parallel`.
+
+Covers every attention flavour in the assigned pool:
+GQA (+QKV bias), MLA (compressed KV, absorbed decode), sliding window,
+per-layer rope theta (traced), qk-norm, logit softcap, cross-attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel import act_shard, current_ctx
+
+# --------------------------------------------------------------------------
+# boxed params
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Boxed:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def _is_boxed(x):
+    return isinstance(x, Boxed)
+
+
+def param(key, shape, axes, dtype, scale: Optional[float] = None,
+          init: str = "normal") -> Boxed:
+    if init == "normal":
+        scale = 0.02 if scale is None else scale
+        v = jax.random.normal(key, shape, dtype) * scale
+    elif init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        raise ValueError(init)
+    assert len(shape) == len(axes), (shape, axes)
+    return Boxed(v, tuple(axes))
+
+
+def unbox(tree):
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=_is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_boxed)
+    return values, axes
+
+
+def stack_boxed(trees):
+    """Stack per-layer boxed param trees along a new leading 'layers' dim."""
+    def _stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return Boxed(vals, ("layers",) + leaves[0].axes)
+    return jax.tree.map(_stack, *trees, is_leaf=_is_boxed)
+
+
+# --------------------------------------------------------------------------
+# norms / embeddings / mlp
+# --------------------------------------------------------------------------
+
+
+def init_rmsnorm(key, d, dtype):
+    return {"scale": param(key, (d,), ("embed",), dtype, init="zeros")}
+    # stored as zeros; applied as (scale + 1 + cfg.norm_offset-1)… see apply.
+
+
+def apply_rmsnorm(p, x, cfg: ModelConfig):
+    # stored scale is centered at 0 → effective weight = scale + 1
+    # (matches gemma's (w+1) with norm_offset folded in; for offset=0
+    # models the stored-at-zero parameterization is equivalent at init).
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    w = p["scale"].astype(jnp.float32) + 1.0
+    return (y * w).astype(x.dtype)
+
+
+def init_embedding(key, cfg: ModelConfig):
+    return {"table": param(key, (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           jnp.dtype(cfg.param_dtype))}
+
+
+def apply_embedding(p, ids, cfg: ModelConfig):
+    x = jnp.take(p["table"].astype(jnp.dtype(cfg.dtype)), ids, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def apply_unembed(p_embed, p_head, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = p_embed["table"].astype(x.dtype)
+        return jnp.einsum("...d,vd->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x, p_head["w"].astype(x.dtype))
+
+
+def init_unembed(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": param(key, (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                       jnp.dtype(cfg.param_dtype))}
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":  # gated (swiglu)
+        return {
+            "wi": param(ks[0], (d, f), ("embed", "mlp"), dt),
+            "wg": param(ks[1], (d, f), ("embed", "mlp"), dt),
+            "wo": param(ks[2], (f, d), ("mlp", "embed"), dt,
+                        scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        }
+    return {
+        "wi": param(ks[0], (d, f), ("embed", "mlp"), dt),
+        "wo": param(ks[2], (f, d), ("mlp", "embed"), dt,
+                    scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    if "wg" in p:
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = act_shard(h, "batch", "seq", "act_mlp")
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta, rotary_dim: int):
+    """x: [..., S, H, D] (positions [..., S] broadcastable); NeoX halves."""
+    if rotary_dim <= 0:
+        return x
+    half = rotary_dim // 2
+    freq_exponents = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.power(jnp.asarray(theta, jnp.float32), -freq_exponents)
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # [..., S, half]
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:rotary_dim].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    if rotary_dim == x.shape[-1]:
+        return rot
+    return jnp.concatenate([rot, x[..., rotary_dim:]], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA family)
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    if cfg.use_mla and not cross:
+        return _init_mla(key, cfg)
+    d = cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": param(ks[0], (d, hq, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": param(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": param(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": param(ks[3], (hq, hd, d), ("heads", "head_dim", "embed"), dt,
+                    scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param(ks[4], (hq, hd), ("heads", "head_dim"), dt, init="zeros")
+        p["bk"] = param(ks[5], (hkv, hd), ("kv_heads", "head_dim"), dt, init="zeros")
+        p["bv"] = param(ks[6], (hkv, hd), ("kv_heads", "head_dim"), dt, init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = param(ks[7], (hd,), ("head_dim",), dt, init="zeros")
+        p["k_norm"] = param(ks[7], (hd,), ("head_dim",), dt, init="zeros")
+    return p
+
+
+def _heads_shardable(n_heads: int) -> bool:
+    """False when the head count can't divide the model axis (whisper's
+    20 heads on a 16-way axis) — attention activations then shard batch
+    over data×model instead (perf iteration 4, EXPERIMENTS §Perf)."""
+    ctx = current_ctx()
+    if not ctx:
+        return True
+    _, mesh = ctx
+    m = dict(mesh.shape).get("model", 1)
+    return n_heads % m == 0
+
+
+def _batch_attn_enabled() -> bool:
+    ctx = current_ctx()
+    if not ctx:
+        return False
+    rules, _ = ctx
+    return rules.mesh_axes("batch_attn") is not None
+
+
+def _attn_axes(n_heads, with_head_dim=True):
+    if _heads_shardable(n_heads):
+        axes = ("batch", "seq", "act_heads")
+    elif _batch_attn_enabled():
+        axes = ("batch_attn", "seq", None)
+    else:
+        axes = ("batch", "seq", None)   # heads replicated, batch over data
+    return axes + ((None,) if with_head_dim else ())
+
+
+def _headwise_rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            (scale.astype(jnp.float32) + 1.0)).astype(x.dtype)
+
+
+def _sdpa(q, k, v, *, scale, causal, window, softcap, q_pos, k_valid):
+    """q: [B,S,H,D]; k/v: [B,T,Hkv,D]; window/theta may be traced.
+
+    ``window``: 0 → full attention.  ``q_pos``: [S] global positions.
+    ``k_valid``: number of valid cache entries (traced ok).
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32) * scale
+    # repeat kv heads (XLA fuses the broadcast; no HBM materialization)
+    kr = act_shard(jnp.repeat(k, group, axis=2).astype(jnp.float32),
+                   *_attn_axes(Hq))
+    vr = act_shard(jnp.repeat(v, group, axis=2).astype(jnp.float32),
+                   *_attn_axes(Hq))
+    if _heads_shardable(Hq):
+        logits = act_shard(jnp.einsum("bshd,bthd->bhst", qf, kr),
+                           "batch", "act_heads", None, None)
+    elif _batch_attn_enabled():
+        logits = act_shard(jnp.einsum("bshd,bthd->bhst", qf, kr),
+                           "batch_attn", None, None, None)
+    else:
+        logits = act_shard(jnp.einsum("bshd,bthd->bhst", qf, kr),
+                           "batch", None, None, None)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(T)
+    mask = kpos[None, :] < k_valid
+    if causal:
+        mask = mask & (kpos[None, :] <= q_pos[:, None])
+    mask = mask & jnp.where(
+        window > 0, kpos[None, :] > (q_pos[:, None] - window), True)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vr)
+    return act_shard(out.astype(q.dtype), *_attn_axes(Hq))
+
+
+def apply_attention(
+    p, x, cfg: ModelConfig, *,
+    causal: bool = True,
+    window=0,                 # static int or traced scalar; 0 → full
+    rope_theta=None,          # static float or traced scalar
+    positions=None,           # [S] global positions of x tokens
+    cache: Optional[Dict] = None,   # {"k","v","pos"} decode cache (updated)
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+):
+    """Returns (y, new_cache_entry_or_None)."""
+    if cfg.use_mla and kv_x is None:
+        return _apply_mla(p, x, cfg, window=window, rope_theta=rope_theta,
+                          positions=positions, cache=cache, causal=causal)
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    src = kv_x if kv_x is not None else x
+    k = jnp.einsum("bsd,dhe->bshe", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", src, p["wv"].astype(dt))
+    if _heads_shardable(hq):
+        q = act_shard(q, "batch", "seq", "act_heads", None)
+        k = act_shard(k, "batch", "seq", "act_kv_heads", None)
+        v = act_shard(v, "batch", "seq", "act_kv_heads", None)
+    else:
+        q = act_shard(q, *_attn_axes(hq))
+        k = act_shard(k, *_attn_axes(hq))
+        v = act_shard(v, *_attn_axes(hq))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if "q_norm" in p:
+        q = _headwise_rms(q, p["q_norm"], cfg.norm_eps)
+        k = _headwise_rms(k, p["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.arange(S)
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    rotary_dim = int(hd * cfg.rotary_frac) if (cfg.pos_embedding == "rope") else 0
+    if rotary_dim and kv_x is None:
+        q = apply_rope(q, positions, theta, rotary_dim)
+        k = apply_rope(k, jnp.arange(k.shape[1]) if cache is None else positions,
+                       theta, rotary_dim)
+
+    new_cache = None
+    if cache is not None and kv_x is None:
+        # write this step's K/V at cache position(s)
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        k, v = ck, cv
+        k_valid = pos + S
+        new_cache = {"k": ck, "v": cv}
+    else:
+        k_valid = k.shape[1]
+
+    scale = (hd ** -0.5) if not cfg.attn_output_multiplier else cfg.attn_output_multiplier
+    out = _sdpa(q, k.astype(dt), v.astype(dt), scale=scale, causal=causal and kv_x is None,
+                window=window if kv_x is None else 0,
+                softcap=cfg.attn_softcap, q_pos=positions, k_valid=k_valid)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# --------------------------------------------------------------------------
+
+
+def _init_mla(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": param(ks[0], (d, ql), ("embed", "q_lora"), dt),
+        "q_norm": param(ks[1], (ql,), ("q_lora",), dt, init="zeros"),
+        "wq_b": param(ks[2], (ql, h, dn + dr), ("q_lora", "heads", "head_dim"), dt),
+        "wkv_a": param(ks[3], (d, kl + dr), ("embed", "kv_lora"), dt),
+        "kv_norm": param(ks[4], (kl,), ("kv_lora",), dt, init="zeros"),
+        "wkv_b": param(ks[5], (kl, h, dn + dv), ("kv_lora", "heads", "head_dim"), dt),
+        "wo": param(ks[6], (h, dv, d), ("heads", "head_dim", "embed"), dt,
+                    scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _apply_mla(p, x, cfg: ModelConfig, *, window, rope_theta, positions,
+               cache, causal=True):
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    kl = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = x.dtype
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    if positions is None:
+        positions = jnp.arange(S)
+
+    # queries through the low-rank path
+    q_c = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+    q_c = _vecnorm(q_c, p["q_norm"], cfg.norm_eps)
+    q = act_shard(jnp.einsum("bsr,rhe->bshe", q_c, p["wq_b"].astype(dt)),
+                  "batch", "seq", "act_heads", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta, dr)
+
+    # compressed KV
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_kv, k_rope_in = ckv[..., :kl], ckv[..., kl:]
+    c_kv = _vecnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope_in[:, :, None, :], positions, theta, dr)[:, :, 0]
+
+    scale = (dn + dr) ** -0.5
+    if cache is not None:
+        pos = cache["pos"]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), pos, axis=1)
+        k_valid = pos + S
+        # absorbed decode path: score in compressed space
+        wkv_b_k = p["wkv_b"].astype(dt)[..., :dn]      # [kl, h, dn]
+        q_eff = act_shard(jnp.einsum("bshe,rhe->bshr", q_nope, wkv_b_k),
+                          "batch", "seq", "act_heads", None)  # [B,S,h,kl]
+        T = cc.shape[1]
+        logits = (jnp.einsum("bshr,btr->bhst", q_eff.astype(jnp.float32),
+                             cc.astype(jnp.float32))
+                  + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32),
+                               cr.astype(jnp.float32))) * scale
+        kpos = jnp.arange(T)
+        mask = kpos[None, :] < k_valid
+        if causal:
+            mask = mask & (kpos[None, :] <= positions[:, None])
+        mask = mask & jnp.where(window > 0, kpos[None, :] > (positions[:, None] - window), True)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, cc.astype(jnp.float32)).astype(dt)
+        wkv_b_v = p["wkv_b"].astype(dt)[..., dn:]      # [kl, h, dv]
+        out = jnp.einsum("bshr,rhe->bshe", ctx, wkv_b_v)
+        y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+        return y, {"c_kv": cc, "k_rope": cr}
+
+    # train / prefill: expand K and V per head
+    kv = act_shard(jnp.einsum("bsr,rhe->bshe", c_kv, p["wkv_b"].astype(dt)),
+                   "batch", "seq", "act_heads", None)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], dr))],
+        axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _sdpa(qq, k, v, scale=scale, causal=causal, window=window,
+                softcap=0.0, q_pos=positions, k_valid=k.shape[1])
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    return y, None
+
+
+def _vecnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            (scale.astype(jnp.float32) + 1.0)).astype(x.dtype)

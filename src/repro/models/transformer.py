@@ -1,0 +1,342 @@
+"""Transformer blocks + scanned stacks for every assigned arch family.
+
+A model trunk is a list of **segments** — runs of structurally identical
+layers — each executed with ``jax.lax.scan`` over stacked parameters
+(keeps HLO size O(1) in depth; essential for the 80-layer archs).
+Layer-dependent attention settings (gemma3's 5:1 local:global pattern,
+per-layer rope theta) ride through the scan as traced per-layer arrays.
+
+Block kinds:
+``attn_mlp``  — attention + MLP            (dense, vlm, whisper encoder)
+``attn_moe``  — attention + MoE            (deepseek-v3, grok-1)
+``ssm``       — mamba2 SSD block           (attention-free)
+``hybrid``    — parallel attn ‖ SSD + MLP  (hymba)
+``dec_cross`` — self-attn + cross-attn + MLP (whisper decoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .nn import (
+    apply_attention,
+    apply_mlp,
+    apply_rmsnorm,
+    init_attention,
+    init_mlp,
+    init_rmsnorm,
+    param,
+    stack_boxed,
+)
+
+
+# --------------------------------------------------------------------------
+# segments
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    n_layers: int
+    first_layer: int  # absolute index of the segment's first layer
+
+
+def plan_segments(cfg: ModelConfig, *, decoder: bool = True) -> List[Segment]:
+    if cfg.enc_dec and not decoder:
+        return [Segment("attn_mlp", cfg.n_enc_layers, 0)]
+    if cfg.enc_dec:
+        return [Segment("dec_cross", cfg.n_layers, 0)]
+    if cfg.arch_type == "ssm":
+        return [Segment("ssm", cfg.n_layers, 0)]
+    if cfg.hybrid:
+        return [Segment("hybrid", cfg.n_layers, 0)]
+    if cfg.n_experts > 0:
+        segs = []
+        if cfg.first_k_dense:
+            segs.append(Segment("attn_mlp", cfg.first_k_dense, 0))
+        segs.append(Segment("attn_moe", cfg.n_layers - cfg.first_k_dense,
+                            cfg.first_k_dense))
+        return segs
+    return [Segment("attn_mlp", cfg.n_layers, 0)]
+
+
+def layer_window_theta(cfg: ModelConfig, layer_idx: int,
+                       serve_window: int = 0) -> Tuple[int, float]:
+    """Static per-layer (window, rope_theta).  window 0 → full attention."""
+    is_global = bool(cfg.global_every) and ((layer_idx + 1) % cfg.global_every == 0)
+    if cfg.global_every and not is_global:
+        window = cfg.sliding_window
+        theta = cfg.rope_theta
+    elif cfg.sliding_window and not cfg.global_every:
+        window, theta = cfg.sliding_window, cfg.rope_theta
+    else:
+        window = 0
+        theta = cfg.rope_theta_global or cfg.rope_theta
+    if serve_window:
+        window = serve_window if window == 0 else min(window, serve_window)
+    return window, theta
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    if kind in ("attn_mlp", "attn_moe", "hybrid", "dec_cross"):
+        p["ln_attn"] = init_rmsnorm(ks[0], cfg.d_model, jnp.dtype(cfg.param_dtype))
+        p["attn"] = init_attention(ks[1], cfg)
+    if kind == "dec_cross":
+        p["ln_cross"] = init_rmsnorm(ks[2], cfg.d_model, jnp.dtype(cfg.param_dtype))
+        p["cross"] = init_attention(ks[3], cfg, cross=True)
+    if kind in ("attn_mlp", "dec_cross"):
+        p["ln_mlp"] = init_rmsnorm(ks[4], cfg.d_model, jnp.dtype(cfg.param_dtype))
+        p["mlp"] = init_mlp(ks[5], cfg)
+    if kind == "attn_moe":
+        p["ln_mlp"] = init_rmsnorm(ks[4], cfg.d_model, jnp.dtype(cfg.param_dtype))
+        p["moe"] = moe_lib.init_moe(ks[5], cfg)
+    if kind in ("ssm", "hybrid"):
+        p["ln_ssm"] = init_rmsnorm(ks[6], cfg.d_model, jnp.dtype(cfg.param_dtype))
+        p["ssm"] = ssm_lib.init_ssm(ks[7], cfg)
+        if kind == "hybrid":
+            # learned output mixing of the two parallel heads
+            p["mix"] = param(ks[6], (2,), (None,), jnp.dtype("float32"), init="ones")
+            p["ln_mlp"] = init_rmsnorm(ks[4], cfg.d_model, jnp.dtype(cfg.param_dtype))
+            p["mlp"] = init_mlp(ks[5], cfg)
+    return p
+
+
+def _attn_cache(cache, cache_pos):
+    if cache is None or "attn" not in cache:
+        return None
+    return {**cache["attn"], "pos": cache_pos}
+
+
+def apply_block(p, x, cfg: ModelConfig, kind: str, *,
+                causal: bool = True,
+                window=0, rope_theta=None, positions=None,
+                cache: Optional[Dict] = None,
+                cache_pos=None,
+                enc_out: Optional[jax.Array] = None):
+    """Returns (y, new_cache, aux_losses)."""
+    new_cache: Dict[str, Any] = {}
+    aux = {}
+
+    if kind in ("attn_mlp", "attn_moe", "dec_cross"):
+        h = apply_rmsnorm(p["ln_attn"], x, cfg)
+        a, kv = apply_attention(p["attn"], h, cfg, causal=causal, window=window,
+                                rope_theta=rope_theta, positions=positions,
+                                cache=_attn_cache(cache, cache_pos))
+        if kv is not None:
+            new_cache["attn"] = kv
+        x = x + a
+        if kind == "dec_cross":
+            h = apply_rmsnorm(p["ln_cross"], x, cfg)
+            c, _ = apply_attention(p["cross"], h, cfg, causal=False,
+                                   positions=positions, kv_x=enc_out)
+            x = x + c
+        h = apply_rmsnorm(p["ln_mlp"], x, cfg)
+        if kind == "attn_moe":
+            m, moe_aux = moe_lib.apply_moe(p["moe"], h, cfg)
+            aux.update(moe_aux)
+        else:
+            m = apply_mlp(p["mlp"], h, cfg)
+        x = x + m
+
+    elif kind == "ssm":
+        h = apply_rmsnorm(p["ln_ssm"], x, cfg)
+        s, sc = ssm_lib.apply_ssm(p["ssm"], h, cfg,
+                                  cache=cache.get("ssm") if cache else None)
+        if sc is not None:
+            new_cache["ssm"] = sc
+        x = x + s
+
+    elif kind == "hybrid":
+        # parallel attention + SSD heads on the same normed input
+        h_attn = apply_rmsnorm(p["ln_attn"], x, cfg)
+        a, kv = apply_attention(p["attn"], h_attn, cfg, causal=causal,
+                                window=window, rope_theta=rope_theta,
+                                positions=positions,
+                                cache=_attn_cache(cache, cache_pos))
+        if kv is not None:
+            new_cache["attn"] = kv
+        h_ssm = apply_rmsnorm(p["ln_ssm"], x, cfg)
+        s, sc = ssm_lib.apply_ssm(p["ssm"], h_ssm, cfg,
+                                  cache=cache.get("ssm") if cache else None)
+        if sc is not None:
+            new_cache["ssm"] = sc
+        mix = jax.nn.softmax(p["mix"].astype(jnp.float32))
+        x = x + (mix[0] * a.astype(jnp.float32)
+                 + mix[1] * s.astype(jnp.float32)).astype(x.dtype)
+        h = apply_rmsnorm(p["ln_mlp"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# stacks (scan over layers per segment)
+# --------------------------------------------------------------------------
+
+
+def init_stack(key, cfg: ModelConfig, *, decoder: bool = True):
+    segments = plan_segments(cfg, decoder=decoder)
+    params = []
+    for si, seg in enumerate(segments):
+        kseg = jax.random.fold_in(key, si)
+        layer_ps = [init_block(jax.random.fold_in(kseg, i), cfg, seg.kind)
+                    for i in range(seg.n_layers)]
+        if cfg.scan_layers:
+            params.append(stack_boxed(layer_ps))
+        else:
+            params.append(layer_ps)
+    return {"segments": params}
+
+
+def _seg_layer_meta(cfg: ModelConfig, seg: Segment, serve_window: int):
+    """Per-layer (window, theta) as python lists (static); the scan path
+    converts them to traced arrays, the unrolled path keeps them static."""
+    wins, thetas = [], []
+    for i in range(seg.n_layers):
+        w, t = layer_window_theta(cfg, seg.first_layer + i, serve_window)
+        wins.append(w)
+        thetas.append(t)
+    return wins, thetas
+
+
+def apply_stack(params, x, cfg: ModelConfig, *,
+                decoder: bool = True,
+                causal: bool = True,
+                positions=None,
+                caches: Optional[List] = None,   # per-segment stacked caches
+                cache_pos=None,
+                enc_out: Optional[jax.Array] = None,
+                serve_window: int = 0):
+    """Run all segments.  Returns (y, new_caches, aux)."""
+    segments = plan_segments(cfg, decoder=decoder)
+    new_caches = []
+    aux_total: Dict[str, Any] = {}
+
+    for si, seg in enumerate(segments):
+        seg_params = params["segments"][si]
+        wins, thetas = _seg_layer_meta(cfg, seg, serve_window)
+        seg_cache = caches[si] if caches is not None else None
+
+        if cfg.scan_layers:
+            def body(carry, xs, _kind=seg.kind):
+                h = carry
+                layer_p, w, th, layer_cache = xs
+                h, nc, aux = apply_block(
+                    layer_p, h, cfg, _kind, causal=causal, window=w,
+                    rope_theta=th, positions=positions, cache=layer_cache,
+                    cache_pos=cache_pos, enc_out=enc_out)
+                lb = aux.get("lb_loss", jnp.zeros((), jnp.float32))
+                return h, (nc, lb)
+
+            if cfg.remat == "block":
+                body = jax.checkpoint(body)
+            xs = (seg_params, jnp.asarray(wins, jnp.int32),
+                  jnp.asarray(thetas, jnp.float32), seg_cache)
+            x, (seg_new_cache, lbs) = jax.lax.scan(body, x, xs)
+            new_caches.append(seg_new_cache)
+            if seg.kind == "attn_moe":
+                aux_total["lb_loss"] = aux_total.get("lb_loss", 0.0) + jnp.sum(lbs)
+        else:
+            seg_new = []
+            for i in range(seg.n_layers):
+                layer_cache = (jax.tree.map(lambda c, _i=i: c[_i], seg_cache)
+                               if seg_cache is not None else None)
+                x, nc, aux = apply_block(
+                    seg_params[i], x, cfg, seg.kind, causal=causal,
+                    window=wins[i], rope_theta=thetas[i],
+                    positions=positions, cache=layer_cache,
+                    cache_pos=cache_pos, enc_out=enc_out)
+                seg_new.append(nc)
+                if "lb_loss" in aux:
+                    aux_total["lb_loss"] = aux_total.get("lb_loss", 0.0) + aux["lb_loss"]
+            if seg_new and seg_new[0]:
+                new_caches.append(jax.tree.map(lambda *cs: jnp.stack(cs), *seg_new))
+            else:
+                new_caches.append(None)
+    return x, new_caches, aux_total
+
+
+# --------------------------------------------------------------------------
+# cache init
+# --------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=None) -> Tuple[List, Any]:
+    """Per-segment stacked decode caches (zeros) + the pos scalar.
+
+    Layout: attn k/v [L, B, S, Hkv, hd]; MLA c_kv [L, B, S, kv_lora],
+    k_rope [L, B, S, rope_dim]; ssm conv [L, B, K-1, conv_dim],
+    state [L, B, H, P, N].  Logical axes for sharding are provided by
+    :func:`cache_logical_axes`.
+    """
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    segments = plan_segments(cfg, decoder=True)
+    caches = []
+    for seg in segments:
+        L = seg.n_layers
+        entry: Dict[str, Any] = {}
+        if seg.kind in ("attn_mlp", "attn_moe", "hybrid", "dec_cross"):
+            if cfg.use_mla:
+                entry["attn"] = {
+                    "c_kv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((L, batch, max_len, cfg.qk_rope_head_dim), dtype),
+                }
+            else:
+                hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim()
+                entry["attn"] = {
+                    "k": jnp.zeros((L, batch, max_len, hkv, hd), dtype),
+                    "v": jnp.zeros((L, batch, max_len, hkv, hd), dtype),
+                }
+        if seg.kind in ("ssm", "hybrid"):
+            d_inner, H, conv_dim = ssm_lib.ssm_dims(cfg)
+            entry["ssm"] = {
+                "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+                "state": jnp.zeros((L, batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                                   jnp.float32),
+            }
+        caches.append(entry)
+    return caches, jnp.zeros((), jnp.int32)
+
+
+def cache_logical_axes(cfg: ModelConfig) -> List:
+    segments = plan_segments(cfg, decoder=True)
+    out = []
+    for seg in segments:
+        entry: Dict[str, Any] = {}
+        if seg.kind in ("attn_mlp", "attn_moe", "hybrid", "dec_cross"):
+            if cfg.use_mla:
+                entry["attn"] = {
+                    "c_kv": ("layers", "batch", "cache_seq", "kv_lora"),
+                    "k_rope": ("layers", "batch", "cache_seq", "head_dim"),
+                }
+            else:
+                entry["attn"] = {
+                    "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                    "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                }
+        if seg.kind in ("ssm", "hybrid"):
+            entry["ssm"] = {
+                "conv": ("layers", "batch", None, "act_mlp"),
+                "state": ("layers", "batch", "act_heads", None, "state"),
+            }
+        out.append(entry)
+    return out

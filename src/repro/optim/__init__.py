@@ -1,0 +1,6 @@
+"""Optimizer substrate (from scratch — optax is not available offline)."""
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedule import cosine_schedule, linear_warmup_cosine
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "cosine_schedule", "linear_warmup_cosine"]

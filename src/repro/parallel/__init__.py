@@ -1,0 +1,21 @@
+"""Sharding rules: logical axes → mesh axes (pod, data, model)."""
+
+from .sharding import (
+    LogicalRules,
+    RULES_DECODE,
+    RULES_LONG_DECODE,
+    RULES_TRAIN,
+    logical_spec,
+    logical_spec_sized,
+    logical_sharding,
+    act_shard,
+    current_ctx,
+    sharding_ctx,
+    make_mesh,
+    shard_constraint,
+)
+
+__all__ = [
+    "LogicalRules", "RULES_TRAIN", "RULES_DECODE", "RULES_LONG_DECODE",
+    "logical_spec", "logical_spec_sized", "logical_sharding", "act_shard", "current_ctx", "sharding_ctx", "make_mesh", "shard_constraint",
+]

@@ -1,0 +1,26 @@
+# NOTE: deliberately NO XLA_FLAGS here — unit/smoke tests run on the
+# single real CPU device.  Multi-device behaviour is tested via
+# subprocesses (tests/test_distributed.py) that set
+# --xla_force_host_platform_device_count themselves.
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 560):
+    """Run a python snippet in a fresh process with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

@@ -1,0 +1,108 @@
+"""Property tests of the Faces oracle + ST program structure (no devices)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DIRECTIONS, CORNERS, EDGES, FACES, FacesConfig, faces_oracle
+from repro.core.halo import _region_for, _slab_shape
+
+SET = settings(max_examples=25, deadline=None)
+
+grid_st = st.tuples(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3))
+pts_st = st.tuples(st.integers(2, 5), st.integers(2, 5), st.integers(2, 5))
+
+
+def test_direction_taxonomy():
+    assert len(DIRECTIONS) == 26
+    assert len(FACES) == 6 and len(EDGES) == 12 and len(CORNERS) == 8
+    assert len(set(DIRECTIONS)) == 26
+    # closed under negation (symmetric exchange)
+    assert all(tuple(-x for x in d) in DIRECTIONS for d in DIRECTIONS)
+
+
+@SET
+@given(grid_st, pts_st, st.booleans())
+def test_oracle_is_linear(grid, pts, periodic):
+    cfg = FacesConfig(grid=grid, points=pts, periodic=periodic,
+                      interior_compute=False)
+    rng = np.random.RandomState(0)
+    a = rng.randn(*grid, *pts).astype(np.float32)
+    b = rng.randn(*grid, *pts).astype(np.float32)
+    lhs = faces_oracle(a + b, cfg)
+    rhs = faces_oracle(a, cfg) + faces_oracle(b, cfg)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+@SET
+@given(pts_st)
+def test_oracle_interior_untouched_by_exchange(pts):
+    """Without the stencil, interior points receive no contributions."""
+    cfg = FacesConfig(grid=(2, 2, 2), points=pts, interior_compute=False)
+    rng = np.random.RandomState(1)
+    u = rng.randn(2, 2, 2, *pts).astype(np.float32)
+    out = faces_oracle(u, cfg)
+    interior = tuple([slice(None)] * 3 + [slice(1, -1)] * 3)
+    np.testing.assert_array_equal(out[interior], u[interior])
+
+
+@SET
+@given(grid_st, pts_st)
+def test_periodic_conserves_boundary_mass(grid, pts):
+    """Periodic halo-sum conserves the total sum (every packed value is
+    deposited exactly once somewhere)."""
+    cfg = FacesConfig(grid=grid, points=pts, periodic=True,
+                      interior_compute=False, dtype="float64")
+    rng = np.random.RandomState(2)
+    u = rng.randn(*grid, *pts).astype(np.float64)
+    out = faces_oracle(u, cfg)
+    added = out - u
+    # total added mass = sum over all 26 packed slabs
+    expect = sum(u[(slice(None),) * 3 + _region_for(d, pts)].sum()
+                 for d in DIRECTIONS)
+    np.testing.assert_allclose(added.sum(), expect, rtol=1e-7, atol=1e-6)
+
+
+def test_slab_shapes():
+    pts = (7, 5, 3)
+    for d in FACES:
+        assert np.prod(_slab_shape(d, pts)) in (5 * 3, 7 * 3, 7 * 5)
+    for d in CORNERS:
+        assert _slab_shape(d, pts) == (1, 1, 1)
+
+
+def test_program_channel_counts():
+    import jax
+    from repro.core import build_faces_program
+    from repro.parallel import make_mesh
+    # mesh build on 1 device: 1x1x1 grid
+    mesh = make_mesh((1, 1, 1), ("gx", "gy", "gz"))
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+    prog = build_faces_program(cfg, mesh)
+    assert prog.n_channels == 26
+    assert prog.n_batches == 1
+    # staged variant: 6 channels over 3 batches
+    cfg3 = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True,
+                       granularity="staged3")
+    prog3 = build_faces_program(cfg3, mesh)
+    assert prog3.n_channels == 6
+    assert prog3.n_batches == 3
+
+
+class TestShardingCtx:
+    def test_act_shard_noop_without_ctx(self):
+        import jax.numpy as jnp
+        from repro.parallel import act_shard
+        x = jnp.ones((4, 4))
+        assert act_shard(x, "batch", None) is x
+
+    def test_ctx_nesting_restores(self):
+        from repro.parallel import RULES_TRAIN, current_ctx, make_mesh, sharding_ctx
+        mesh = make_mesh((1,), ("model",))
+        assert current_ctx() is None
+        with sharding_ctx(RULES_TRAIN, mesh):
+            assert current_ctx() is not None
+            with sharding_ctx(RULES_TRAIN, mesh):
+                pass
+            assert current_ctx() is not None
+        assert current_ctx() is None

@@ -1,0 +1,136 @@
+"""Launcher-layer tests: HLO analysis, step builders, mesh, counting."""
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (
+    analyze_collectives,
+    analyze_dots,
+    _tensor_bytes,
+)
+
+
+class TestTensorBytes:
+    def test_simple(self):
+        assert _tensor_bytes("bf16[2,3]") == 12
+        assert _tensor_bytes("f32[128]") == 512
+        assert _tensor_bytes("f32[]") == 4
+
+    def test_tuple(self):
+        assert _tensor_bytes("(bf16[2,2], f32[4])") == 8 + 16
+
+    def test_unknown_dtype_ignored(self):
+        assert _tensor_bytes("token[]") == 0
+
+
+HLO_SAMPLE = """
+ENTRY %main (p0: f32[64,32]) -> f32[64,32] {
+  %p0 = f32[64,32] parameter(0)
+  %ag = f32[64,32] all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[64,32] all-reduce(%ag), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[64,32] collective-permute(%ar), source_target_pairs={{0,1},{1,0}}
+  ROOT %rs = f32[64,32] reduce-scatter(%cp), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+
+class TestCollectives:
+    def test_kinds_and_counts(self):
+        stats = analyze_collectives(HLO_SAMPLE, 4)
+        assert stats.count_by_kind == {
+            "all-gather": 1, "all-reduce": 1, "collective-permute": 1,
+            "reduce-scatter": 1}
+
+    def test_wire_byte_conventions(self):
+        stats = analyze_collectives(HLO_SAMPLE, 4)
+        nbytes = 64 * 32 * 4
+        frac = 3 / 4
+        assert np.isclose(stats.bytes_by_kind["all-gather"], nbytes * frac)
+        assert np.isclose(stats.bytes_by_kind["all-reduce"], 2 * nbytes * frac)
+        assert np.isclose(stats.bytes_by_kind["reduce-scatter"], nbytes * frac)
+        assert np.isclose(stats.bytes_by_kind["collective-permute"], nbytes)
+
+
+DOT_SAMPLE = """
+ENTRY %main (p0: f32[8,16], p1: f32[16,4]) -> f32[8,4] {
+  %p0 = f32[8,16] parameter(0)
+  %p1 = f32[16,4] parameter(1)
+  ROOT %dot.1 = f32[8,4] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+%other (a: f32[2,3]) -> f32[2,2] {
+  %a = f32[2,3] parameter(0)
+  ROOT %dot.2 = f32[2,2] dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+}
+"""
+
+
+class TestDots:
+    def test_flops_and_scoping(self):
+        stats = analyze_dots(DOT_SAMPLE)
+        assert stats.n_dots == 2
+        # 2*8*4*16 + 2*2*2*3
+        assert stats.total_flops == 2 * 8 * 4 * 16 + 2 * 2 * 2 * 3
+
+
+class TestCounting:
+    def test_param_counts_match_published(self):
+        from repro.configs import get_config
+        from repro.models.counting import count_params
+        expect = {
+            "qwen1.5-0.5b": (0.46e9, 0.47e9),
+            "deepseek-v3-671b": (6.6e11, 6.8e11),
+            "grok-1-314b": (3.0e11, 3.3e11),
+            "glm4-9b": (9.0e9, 9.6e9),
+            "mamba2-2.7b": (2.6e9, 2.8e9),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = count_params(get_config(arch))
+            assert lo <= n <= hi, (arch, n)
+
+    def test_active_less_than_total_for_moe(self):
+        from repro.configs import get_config
+        from repro.models.counting import count_params
+        for arch in ("deepseek-v3-671b", "grok-1-314b"):
+            cfg = get_config(arch)
+            assert count_params(cfg, True) < 0.5 * count_params(cfg)
+
+    def test_model_flops_monotone_in_shape(self):
+        from repro.configs import get_config
+        from repro.configs.base import SHAPES
+        from repro.models.counting import model_flops
+        cfg = get_config("glm4-9b")
+        train = model_flops(cfg, SHAPES["train_4k"])["model_flops"]
+        prefill = model_flops(cfg, SHAPES["prefill_32k"])["model_flops"]
+        decode = model_flops(cfg, SHAPES["decode_32k"])["model_flops"]
+        assert train > prefill > decode > 0
+
+
+@pytest.mark.slow
+def test_step_bundle_lowers_on_small_mesh(subproc):
+    """build_bundle lowers train/prefill/serve for a smoke config on a
+    4-device data×model mesh (mini version of the 512-chip dry-run)."""
+    r = subproc("""
+import dataclasses, jax
+from repro.configs.base import ShapeConfig, get_config
+from repro.launch.steps import build_bundle
+from repro.parallel import make_mesh
+cfg = dataclasses.replace(get_config("qwen1.5-0.5b").smoke(), vocab=512)
+mesh = make_mesh((2, 2), ("data", "model"))
+for shape in (ShapeConfig("t", 32, 4, "train"),
+              ShapeConfig("p", 32, 4, "prefill"),
+              ShapeConfig("d", 64, 4, "decode")):
+    bundle = build_bundle(cfg, shape, mesh)
+    compiled = bundle.lower().compile()
+    assert compiled.cost_analysis()["flops"] > 0
+    print(shape.kind, "ok")
+""", devices=4)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert r.stdout.count("ok") == 3
+
+
+def test_production_mesh_requires_512_devices():
+    """make_production_mesh fails cleanly without forced device count
+    (this test runs with the single real device)."""
+    from repro.launch.mesh import make_production_mesh
+    with pytest.raises(ValueError):
+        make_production_mesh()

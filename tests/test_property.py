@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.descriptors import (
+    GridOffsetPeer,
+    OffsetPeer,
+    RecvDesc,
+    SendDesc,
+    perm_for,
+)
+from repro.core.matching import MatchError, match_batch
+from repro.parallel import RULES_DECODE, RULES_TRAIN, logical_spec_sized
+
+SETTINGS = settings(max_examples=60, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+# -- matching: every well-posed batch matches completely ----------------------
+
+peer_st = st.one_of(
+    st.builds(OffsetPeer,
+              axis=st.sampled_from(["x", "y"]),
+              delta=st.integers(-3, 3).filter(lambda d: d != 0),
+              periodic=st.booleans()),
+    st.builds(lambda dx, dy, p: GridOffsetPeer(("x", "y"), (dx, dy), p),
+              st.integers(-2, 2), st.integers(-2, 2),
+              st.booleans()).filter(lambda g: any(g.deltas)),
+)
+
+
+@SETTINGS
+@given(st.lists(st.tuples(peer_st, st.integers(0, 5)), min_size=1, max_size=12))
+def test_matching_total_when_recvs_mirror_sends(pairs):
+    sends = [SendDesc(f"s{i}", p, tag=t) for i, (p, t) in enumerate(pairs)]
+    recvs = [RecvDesc(f"r{i}", p.inverse(), tag=t)
+             for i, (p, t) in enumerate(pairs)]
+    chans = match_batch(sends, recvs)
+    assert len(chans) == len(sends)
+    # every send buffer appears exactly once as a channel source
+    assert sorted(c.src_buf for c in chans) == sorted(s.buf for s in sends)
+
+
+@SETTINGS
+@given(st.lists(st.tuples(peer_st, st.integers(0, 5)), min_size=1, max_size=8),
+       st.integers(0, 7))
+def test_matching_incomplete_always_raises(pairs, drop_idx):
+    sends = [SendDesc(f"s{i}", p, tag=t) for i, (p, t) in enumerate(pairs)]
+    recvs = [RecvDesc(f"r{i}", p.inverse(), tag=t)
+             for i, (p, t) in enumerate(pairs)]
+    del recvs[drop_idx % len(recvs)]
+    with pytest.raises(MatchError):
+        match_batch(sends, recvs)
+
+
+# -- perms: permutations are always injective and in-range ---------------------
+
+
+@SETTINGS
+@given(peer_st, st.integers(1, 5), st.integers(1, 5))
+def test_perm_injective_and_in_range(peer, nx, ny):
+    shape = {"x": nx, "y": ny}
+    if isinstance(peer, OffsetPeer):
+        n = shape[peer.axis]
+    else:
+        n = nx * ny
+    _, pairs = perm_for(peer, shape)
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    assert len(set(srcs)) == len(srcs)
+    assert len(set(dsts)) == len(dsts)
+    assert all(0 <= s < n and 0 <= d < n for s, d in pairs)
+
+
+# -- sharding: resolved specs always divide the shape ---------------------------
+
+AXES_POOL = [None, "batch", "seq", "embed", "heads", "kv_heads", "mlp",
+             "vocab", "expert", "layers", "cache_seq"]
+
+
+@SETTINGS
+@given(st.lists(st.tuples(st.sampled_from(AXES_POOL),
+                          st.integers(1, 4096)),
+                min_size=1, max_size=5),
+       st.sampled_from(["train", "decode"]))
+def test_logical_spec_sized_always_divides(dims, regime):
+    import jax
+    from repro.parallel import make_mesh
+
+    rules = RULES_TRAIN if regime == "train" else RULES_DECODE
+    # a fake 16x16-shaped mesh over 1 device via abstract mesh:
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    shape = tuple(d for _, d in dims)
+    axes = tuple(a for a, _ in dims)
+    spec = logical_spec_sized(shape, axes, rules, mesh)
+    sizes = dict(mesh.shape)
+    used = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        total = int(np.prod([sizes[n] for n in names]))
+        assert dim % total == 0, (shape, axes, spec)
+        used.extend(names)
+    # no mesh axis may shard two different dims
+    assert len(used) == len(set(used))

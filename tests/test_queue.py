@@ -1,0 +1,152 @@
+"""STQueue API semantics (paper §III) — single-device unit tests."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    GridOffsetPeer,
+    MatchError,
+    OffsetPeer,
+    QueueError,
+    STQueue,
+    create_queue,
+    match_batch,
+)
+from repro.core.descriptors import RecvDesc, SendDesc, perm_for
+
+
+def _mesh1():
+    from repro.parallel import make_mesh
+    return make_mesh((1,), ("x",))
+
+
+def _queue():
+    q = create_queue(_mesh1(), "t")
+    q.buffer("a", (4, 4), np.float32, pspec=("x",))
+    q.buffer("b", (4, 4), np.float32, pspec=("x",))
+    return q
+
+
+class TestQueueAPI:
+    def test_enqueue_is_nonblocking_descriptor_append(self):
+        q = _queue()
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=0)
+        assert q.n_descriptors == 2  # nothing executed, nothing built
+
+    def test_wait_before_start_rejected(self):
+        q = _queue()
+        with pytest.raises(QueueError):
+            q.enqueue_wait()
+
+    def test_uncovered_sends_rejected_at_build(self):
+        q = _queue()
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=0)
+        with pytest.raises(MatchError, match="never trigger"):
+            q.build()
+
+    def test_use_after_free_rejected(self):
+        q = _queue()
+        q.free()
+        with pytest.raises(QueueError, match="use-after-free"):
+            q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+
+    def test_undeclared_buffer_rejected(self):
+        q = _queue()
+        with pytest.raises(QueueError, match="undeclared"):
+            q.enqueue_send("nope", OffsetPeer("x", 1), tag=0)
+
+    def test_batching_one_start_covers_all(self):
+        q = _queue()
+        for t in range(4):
+            q.enqueue_recv("b", OffsetPeer("x", -1), tag=t)
+        for t in range(4):
+            q.enqueue_send("a", OffsetPeer("x", 1), tag=t)
+        q.enqueue_start()
+        q.enqueue_wait()
+        prog = q.build()
+        assert prog.n_batches == 1
+        assert len(prog.batches[0].channels) == 4
+        assert prog.batches[0].waited
+
+    def test_dispatch_count_contrast(self):
+        # the paper's headline structural claim: ST = 1 dispatch,
+        # host-orchestrated = one per kernel+channel
+        q = _queue()
+        q.enqueue_kernel(lambda a: a * 2, ["a"], ["a"])
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=0)
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+        q.enqueue_start()
+        q.enqueue_wait()
+        prog = q.build()
+        assert prog.dispatch_count_fused() == 1
+        assert prog.dispatch_count_host() == 2  # 1 kernel + 1 channel
+
+    def test_build_idempotent(self):
+        q = _queue()
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=0)
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+        q.enqueue_start()
+        assert q.build() is q.build()
+
+
+class TestMatching:
+    def test_offset_peers_match_by_inverse(self):
+        s = [SendDesc("a", OffsetPeer("x", 1), tag=7)]
+        r = [RecvDesc("b", OffsetPeer("x", -1), tag=7)]
+        chans = match_batch(s, r)
+        assert len(chans) == 1
+        assert chans[0].src_buf == "a" and chans[0].dst_buf == "b"
+
+    def test_tag_mismatch_raises(self):
+        s = [SendDesc("a", OffsetPeer("x", 1), tag=7)]
+        r = [RecvDesc("b", OffsetPeer("x", -1), tag=8)]
+        with pytest.raises(MatchError, match="unmatched ST send"):
+            match_batch(s, r)
+
+    def test_leftover_recv_raises(self):
+        r = [RecvDesc("b", OffsetPeer("x", -1), tag=7)]
+        with pytest.raises(MatchError, match="unmatched ST recv"):
+            match_batch([], r)
+
+    def test_fifo_order_same_tag(self):
+        # MPI non-overtaking: same (peer, tag) matches in FIFO order
+        s = [SendDesc("a1", OffsetPeer("x", 1), tag=0),
+             SendDesc("a2", OffsetPeer("x", 1), tag=0)]
+        r = [RecvDesc("b1", OffsetPeer("x", -1), tag=0),
+             RecvDesc("b2", OffsetPeer("x", -1), tag=0)]
+        chans = match_batch(s, r)
+        assert [(c.src_buf, c.dst_buf) for c in chans] == [
+            ("a1", "b1"), ("a2", "b2")]
+
+    def test_grid_offset_inverse(self):
+        s = [SendDesc("a", GridOffsetPeer(("x", "y"), (1, -1)), tag=0)]
+        r = [RecvDesc("b", GridOffsetPeer(("x", "y"), (-1, 1)), tag=0)]
+        assert len(match_batch(s, r)) == 1
+
+
+class TestPerms:
+    def test_offset_perm_nonperiodic_drops_boundary(self):
+        axis, pairs = perm_for(OffsetPeer("x", 1), {"x": 4})
+        assert axis == "x"
+        assert pairs == [(0, 1), (1, 2), (2, 3)]
+
+    def test_offset_perm_periodic_wraps(self):
+        _, pairs = perm_for(OffsetPeer("x", 1, periodic=True), {"x": 4})
+        assert (3, 0) in pairs and len(pairs) == 4
+
+    def test_grid_perm_diagonal(self):
+        axes, pairs = perm_for(GridOffsetPeer(("x", "y"), (1, 1)),
+                               {"x": 2, "y": 2})
+        assert axes == ("x", "y")
+        # only (0,0)->(1,1) survives the boundary on a 2x2 grid
+        assert pairs == [(0, 3)]
+
+    def test_grid_perm_is_injective(self):
+        _, pairs = perm_for(GridOffsetPeer(("x", "y", "z"), (1, -1, 0),
+                                           periodic=True),
+                            {"x": 3, "y": 2, "z": 2})
+        dsts = [d for _, d in pairs]
+        assert len(set(dsts)) == len(dsts) == 12

@@ -17,6 +17,11 @@ fig11  2×2×2 3-D (26 neighbors): same A/B.  Paper: ST +4% — the win
 fig12  trigger tuning: stock stream-memory ops (ST `stream` mode,
        strict FIFO barriers) vs hand-tuned shaders (ST `dataflow` mode,
        minimal ordering).  Paper: +8% over baseline.
+figP   persistent iteration loop (beyond-paper; the "fully offloaded"
+       follow-up): host per-op vs fused per-iteration vs persistent
+       (device-resident fori_loop) — the host-dispatch count for the
+       whole N-iteration timed loop collapses from N×per-op and N×1
+       down to exactly 1, measured via HostStats counters.
 
 Loop configuration mirrors the paper (§V-B): outer × middle × inner
 with buffer alloc in the outer loop; defaults are scaled down for CPU
@@ -150,9 +155,62 @@ def fig12(inner=None):
     return v
 
 
+def fig_persistent(inner=None):
+    """Persistent loop: N iterations as ONE dispatch (vs N, vs N×per-op)."""
+    inner = inner or _cfg_env("FACES_INNER", 10)
+    from repro.core import FusedEngine, HostEngine, PersistentEngine
+
+    _, prog, u0 = _setup((2, 2, 2), (12, 12, 12))
+    pprog = prog.persistent(inner)
+    repeats = 5
+    rows = {}
+
+    # host per-op: every descriptor its own dispatch, each iteration
+    host = HostEngine(prog, sync="every_op")
+    mem = host.init_buffers({"u": u0})
+    host(dict(mem))  # warm per-descriptor compiles
+    host.stats.reset()
+    rows["host_per_op"] = _time_engine(host, mem, inner, repeats)
+    rows["host_per_op"]["dispatches_per_loop"] = host.stats.dispatches // repeats
+
+    # fused: one dispatch per iteration
+    fused = FusedEngine(prog, mode="dataflow")
+    mem = fused.init_buffers({"u": u0})
+    fused(dict(mem))  # warm
+    fused.stats.reset()
+    rows["fused_per_iter"] = _time_engine(fused, mem, inner, repeats)
+    rows["fused_per_iter"]["dispatches_per_loop"] = fused.stats.dispatches // repeats
+
+    # persistent: ONE dispatch for the whole inner loop
+    pers = PersistentEngine(pprog, mode="dataflow")
+    mem = pers.init_buffers({"u": u0})
+    pers(dict(mem))  # warm
+    pers.stats.reset()
+    rows["persistent"] = _time_engine(pers, mem, 1, repeats)  # 1 call = inner iters
+    rows["persistent"]["dispatches_per_loop"] = pers.stats.dispatches // repeats
+
+    base = rows["host_per_op"]["avg_s"]
+    for name, r in rows.items():
+        rel = r["avg_s"] / base if base else float("nan")
+        RESULTS.append({
+            "bench": "faces_figP", "variant": name,
+            "us_per_call": r["avg_s"] * 1e6,
+            "derived": f"rel_to_host={rel:.3f};"
+                       f"dispatches_per_loop={r['dispatches_per_loop']}",
+        })
+        print(f"  figP   {name:14s} avg={r['avg_s']*1e3:9.2f}ms "
+              f"rel={rel:6.3f} dispatch/loop={r['dispatches_per_loop']}")
+    assert rows["persistent"]["dispatches_per_loop"] == 1
+    print(f"  contrast: {inner} iterations cost the host "
+          f"{rows['host_per_op']['dispatches_per_loop']} dispatches, the fused "
+          f"engine {rows['fused_per_iter']['dispatches_per_loop']}, the "
+          f"persistent engine 1 (device-resident loop)")
+    return rows
+
+
 def run_all():
     print("Faces microbenchmark (paper §V; 8 host devices)")
-    for fn in (fig8, fig9, fig10, fig11, fig12):
+    for fn in (fig8, fig9, fig10, fig11, fig12, fig_persistent):
         print(f"-- {fn.__name__}: {fn.__doc__.splitlines()[0]}")
         fn()
     return RESULTS

@@ -1,0 +1,53 @@
+"""Smoke the persistent engine on 8 host devices: N Faces iterations as
+ONE host dispatch, vs the host engine's N × per-op dispatches."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    FacesConfig, HostEngine, PersistentEngine, build_faces_program,
+    faces_oracle,
+)
+from repro.core.halo import AXES3
+
+N = 5
+mesh = jax.make_mesh((2, 2, 2), AXES3)
+cfg = FacesConfig(grid=(2, 2, 2), points=(5, 4, 3))
+prog = build_faces_program(cfg, mesh).persistent(N)
+print("batches:", prog.n_batches, "channels:", prog.n_channels,
+      "n_iters:", prog.n_iters)
+
+rng = np.random.RandomState(0)
+u0 = rng.randn(2, 2, 2, 5, 4, 3).astype(np.float32)
+
+ref = u0
+for _ in range(N):
+    ref = faces_oracle(ref, cfg)
+
+host = HostEngine(prog)
+hmem = host.init_buffers({"u": u0})
+for _ in range(N):
+    hmem = host(hmem)
+np.testing.assert_allclose(np.asarray(hmem["u"]), ref, rtol=1e-4, atol=1e-4)
+print(f"host     OK dispatches={host.stats.dispatches} "
+      f"(= {N} x {prog.dispatch_count_host()})")
+
+for mode in ("stream", "dataflow"):
+    eng = PersistentEngine(prog, mode=mode)
+    out = eng(eng.init_buffers({"u": u0}))
+    np.testing.assert_allclose(np.asarray(out["u"]), ref, rtol=1e-4, atol=1e-4)
+    print(f"persistent[{mode}] OK dispatches={eng.stats.dispatches} "
+          f"double_buffer={eng.double_buffer} slots={len(eng._slots)}")
+
+# convergence-style loop: per-iteration residual with zero host syncs
+def sq_norm(mem):
+    return jax.lax.psum(jnp.sum(mem["u"].astype(jnp.float32) ** 2), AXES3)
+
+eng = PersistentEngine(prog, mode="dataflow", reduce_fn=sq_norm)
+out, residuals = eng(eng.init_buffers({"u": u0}))
+print("residual trace:", [f"{float(r):.3e}" for r in np.asarray(residuals)])
+assert residuals.shape == (N,)
+print("PERSISTENT SMOKE PASS")

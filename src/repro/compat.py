@@ -1,0 +1,71 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the current jax API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, pallas-TPU ``CompilerParams``); older
+installs (0.4.x) spell these differently or lack them.  Importing the
+aliases from here keeps every call site on the modern spelling while
+remaining runnable on the baked-in toolchain:
+
+* :func:`shard_map`  — ``jax.shard_map`` when present, else
+  ``jax.experimental.shard_map.shard_map``; the modern ``check_vma``
+  kwarg maps onto legacy ``check_rep``.
+* :func:`auto_axis_types` — the ``axis_types=(AxisType.Auto, ...)``
+  kwarg dict for ``Mesh``/``jax.make_mesh``, empty where unsupported
+  (pre-AxisType jax is implicitly all-auto).
+* :func:`tpu_compiler_params` — pallas-TPU ``CompilerParams`` /
+  ``TPUCompilerParams`` constructor.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """``jax.shard_map`` across jax versions (``check_vma``⇄``check_rep``)."""
+    if _NEW_SHARD_MAP is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return _NEW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {} if check_vma is None else {"check_rep": bool(check_vma)}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def jit_shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.jit(shard_map(...))`` — the wrapper benches/tests hand-roll;
+    centralized so the next jax-compat change lands in one place."""
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma))
+
+
+def axis_size(axis) -> int:
+    """``jax.lax.axis_size`` (newer jax) or the classic ``psum(1, axis)``
+    idiom, which stays a static int for constant operands."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis)
+    return jax.lax.psum(1, axis)
+
+
+def auto_axis_types(n_axes: int) -> dict:
+    """``axis_types`` kwarg marking all ``n_axes`` mesh axes Auto, or an
+    empty dict on jax versions without ``jax.sharding.AxisType``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params (``CompilerParams``, formerly
+    ``TPUCompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -8,6 +8,8 @@ The paper's contribution as a composable JAX module:
 * :mod:`.counters`     — trigger/completion counters as data dependencies
 * :mod:`.engine_fused` — ST execution: one fused XLA program
 * :mod:`.engine_host`  — baseline: host-orchestrated per-op dispatch
+* :mod:`.engine_persistent` — fully offloaded: N iterations, one dispatch,
+  the device owns the loop (double-buffered slots, carried counters)
 * :mod:`.halo`         — the Faces 26-neighbor pattern as an ST program
 * :mod:`.overlap`      — decomposed overlap-friendly collectives
 """
@@ -35,6 +37,7 @@ from .descriptors import (
 )
 from .engine_fused import FusedEngine
 from .engine_host import HostEngine, HostStats
+from .engine_persistent import PersistentEngine
 from .halo import (
     CORNERS,
     DIRECTIONS,
@@ -43,18 +46,20 @@ from .halo import (
     FacesConfig,
     build_faces_program,
     faces_oracle,
+    run_faces_persistent,
 )
 from .matching import Batch, Channel, MatchError, match_batch
 from .queue import QueueError, STProgram, STQueue, create_queue
 
 __all__ = [
     "STQueue", "STProgram", "create_queue", "QueueError",
-    "FusedEngine", "HostEngine", "HostStats",
+    "FusedEngine", "HostEngine", "HostStats", "PersistentEngine",
     "OffsetPeer", "GridOffsetPeer", "PairListPeer",
     "SendDesc", "RecvDesc", "CollDesc", "KernelDesc", "StartDesc", "WaitDesc",
     "BufferSpec", "Batch", "Channel", "MatchError", "match_batch",
     "TriggerCounter", "CompletionCounter", "fresh_token", "bump", "tie",
     "gate", "completion_from",
     "FacesConfig", "build_faces_program", "faces_oracle",
+    "run_faces_persistent",
     "DIRECTIONS", "FACES", "EDGES", "CORNERS",
 ]

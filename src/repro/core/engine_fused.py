@@ -44,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from . import counters
 from .descriptors import (
     CollDesc,
@@ -101,6 +103,10 @@ class FusedEngine:
         self.mesh = program.mesh
         self._mesh_shape = dict(self.mesh.shape)
         self._jitted = None
+        # HostStats-shaped dispatch accounting (one dispatch per call,
+        # zero host sync points) so benchmarks measure rather than infer
+        from .engine_host import HostStats
+        self.stats = HostStats()
 
     # -- public API -----------------------------------------------------------
 
@@ -129,8 +135,10 @@ class FusedEngine:
             self._jitted = self._build_jit()
         return self._jitted
 
-    def __call__(self, mem: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-        return self.compile()(mem)
+    def __call__(self, mem: Dict[str, jax.Array]):
+        out = self.compile()(mem)
+        self.stats.dispatches += 1
+        return out
 
     def lower(self, mem_specs: Optional[Dict[str, jax.ShapeDtypeStruct]] = None):
         """Lower (ShapeDtypeStruct stand-ins — used by dry-run/benchmarks)."""
@@ -153,7 +161,7 @@ class FusedEngine:
         # check_vma=False: Pallas calls inside the program can't declare
         # varying-mesh-axes on their out_shapes; ordering is enforced by
         # the token ties, not by vma tracking.
-        sharded = jax.shard_map(
+        sharded = shard_map(
             body, mesh=self.mesh, in_specs=(specs,), out_specs=specs,
             check_vma=False,
         )
@@ -166,10 +174,34 @@ class FusedEngine:
 
 def _run_program(mem: Dict[str, jax.Array], *, prog: STProgram, mode: str,
                  mesh_shape: Dict[str, int]) -> Dict[str, jax.Array]:
+    mem, _, _ = _interpret_program(mem, prog=prog, mode=mode,
+                                   mesh_shape=mesh_shape)
+    return mem
+
+
+def _interpret_program(
+    mem: Dict[str, jax.Array],
+    *,
+    prog: STProgram,
+    mode: str,
+    mesh_shape: Dict[str, int],
+    token: Optional[jax.Array] = None,
+    comp_token: Optional[jax.Array] = None,
+) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Interpret one pass over ``prog``'s descriptors.
+
+    Shared by :class:`FusedEngine` (one pass per host dispatch) and
+    :class:`~repro.core.engine_persistent.PersistentEngine` (N passes
+    inside a device-resident loop).  ``token``/``comp_token`` are the
+    trigger and completion counters; passing the values returned by a
+    previous pass preserves MPIX_Queue-reuse semantics — the counters
+    keep advancing across iterations instead of restarting at zero.
+    """
     mem = dict(mem)
-    token = counters.fresh_token()          # trigger counter
-    comp_token = counters.fresh_token()     # completion counter
-    batch_iter = iter(prog.batches)
+    if token is None:
+        token = counters.fresh_token()          # trigger counter
+    if comp_token is None:
+        comp_token = counters.fresh_token()     # completion counter
     batches_by_index = {b.index: b for b in prog.batches}
     # buffers each batch received into (for dataflow-mode waits)
     recv_bufs_by_batch: Dict[int, List[str]] = {
@@ -236,7 +268,7 @@ def _run_program(mem: Dict[str, jax.Array], *, prog: STProgram, mode: str,
         # Send/Recv/Coll descs themselves are no-ops here: they were
         # matched into their batch at build time (deferred execution).
 
-    return mem
+    return mem, token, comp_token
 
 
 def _run_channel(mem, ch: Channel, token, mesh_shape):

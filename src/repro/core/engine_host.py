@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .descriptors import CollDesc, KernelDesc, StartDesc, WaitDesc
 from .engine_fused import _axes_tuple, _ensure_vma, _linear_rank
 from .matching import Channel
@@ -154,8 +156,8 @@ class HostEngine:
                 return tuple(fixed)
 
             self._kernel_cache[key] = jax.jit(
-                jax.shard_map(body, mesh=self.mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_vma=False)
+                shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
             )
         return self._kernel_cache[key]
 
@@ -188,9 +190,9 @@ class HostEngine:
                 return dst, received
 
             self._channel_cache[key] = jax.jit(
-                jax.shard_map(body, mesh=self.mesh,
-                              in_specs=(src_spec, dst_spec),
-                              out_specs=(dst_spec, src_spec), check_vma=False)
+                shard_map(body, mesh=self.mesh,
+                          in_specs=(src_spec, dst_spec),
+                          out_specs=(dst_spec, src_spec), check_vma=False)
             )
         return self._channel_cache[key]
 
@@ -225,7 +227,7 @@ class HostEngine:
                 return _ensure_vma(out.astype(prog.buffers[coll.out].dtype), out_axes)
 
             self._coll_cache[key] = jax.jit(
-                jax.shard_map(body, mesh=self.mesh, in_specs=(in_spec,),
-                              out_specs=out_spec, check_vma=False)
+                shard_map(body, mesh=self.mesh, in_specs=(in_spec,),
+                          out_specs=out_spec, check_vma=False)
             )
         return self._coll_cache[key]

@@ -1,0 +1,245 @@
+"""Persistent ST engine — the device owns the iteration loop.
+
+:class:`~repro.core.engine_fused.FusedEngine` offloads the control path
+of one communication batch, but the *host* still re-dispatches the
+program every iteration of a timed loop (N iterations → N dispatches).
+The follow-up work on fully offloaded stream triggering moves the whole
+loop onto the device: the host enqueues once, and a device-resident
+sequencer re-runs trigger → communicate → wait → compute until the
+iteration count (or a convergence predicate) says stop.
+
+This engine is that execution model for an :class:`STProgram`: the
+fused interpreter (:func:`~repro.core.engine_fused._interpret_program`)
+runs inside an on-device ``jax.lax.fori_loop`` whose carry holds
+
+* every program buffer (the Faces field ``u`` survives on-device across
+  iterations — no host round-trip between them);
+* the **trigger and completion counters**, threaded through every pass
+  so the MPIX_Queue-reuse semantics of :mod:`.queue` hold literally:
+  iteration i+1's thresholds sit above iteration i's counter values
+  instead of restarting from zero;
+* optionally a per-iteration scalar reduction (residual norms etc.), so
+  convergence-style loops can report progress without a host sync.
+
+Double buffering
+----------------
+In ``dataflow`` mode the wait gates only the buffers a batch received
+into.  Message *slot* buffers (pure staging: packed faces out, received
+faces in) are therefore the only serialization between iterations that
+is not a real data dependency.  With ``double_buffer=True`` each slot
+buffer gets two copies and iteration i uses copy ``i % 2``: combined
+with ``unroll=2`` on the loop, iteration i+1's packs write slot B while
+iteration i's waits still gate slot A, recovering the pack/wait overlap
+a NIC-offloaded persistent queue gets from alternating DWQ entries.
+
+Slot safety is decided statically: a buffer is double-buffered only if
+it is touched by a channel/collective and its first access in execution
+order is a write (replace-mode deposits count as writes; add-mode
+deposits accumulate across iterations and disqualify the buffer).
+
+Dispatch accounting
+-------------------
+``stats`` is a :class:`~repro.core.engine_host.HostStats`: one call =
+one dispatch, zero host sync points, regardless of ``n_iters`` — the
+contrast :mod:`benchmarks.faces_bench` reports against the host
+(``n_iters × dispatch_count_host()``) and fused (``n_iters × 1``)
+engines.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+
+from . import counters
+from .descriptors import KernelDesc, StartDesc
+from .engine_fused import FusedEngine, _interpret_program
+from .queue import STProgram
+
+
+def slot_buffers(prog: STProgram) -> Tuple[str, ...]:
+    """Statically identify message-slot buffers safe to double-buffer.
+
+    A buffer qualifies when (a) a channel or collective touches it and
+    (b) its first access in *execution* order is a write — so its value
+    at iteration start never reaches the result.  Replace-mode channel
+    deposits count as writes (non-receiving ranks preserve a value both
+    slots share); add-mode deposits read the accumulator and disqualify.
+    """
+    comm_bufs: Set[str] = set()
+    for b in prog.batches:
+        for ch in b.channels:
+            comm_bufs.add(ch.src_buf)
+            comm_bufs.add(ch.dst_buf)
+        for coll in b.colls:
+            comm_bufs.add(coll.buf)
+            comm_bufs.add(coll.out)
+
+    first_access: Dict[str, str] = {}  # buffer -> "read" | "write"
+
+    def see(buf: str, kind: str):
+        first_access.setdefault(buf, kind)
+
+    for d in prog.descriptors:
+        if isinstance(d, KernelDesc):
+            for r in d.reads:
+                see(r, "read")
+            for w in d.writes:
+                see(w, "write")
+        elif isinstance(d, StartDesc):
+            batch = next(b for b in prog.batches if b.index == d.batch)
+            for ch in batch.channels:
+                see(ch.src_buf, "read")
+            for coll in batch.colls:
+                see(coll.buf, "read")
+            for ch in batch.channels:
+                see(ch.dst_buf, "read" if ch.mode == "add" else "write")
+            for coll in batch.colls:
+                see(coll.out, "write")
+
+    return tuple(sorted(
+        b for b in comm_bufs if first_access.get(b) == "write"
+    ))
+
+
+class PersistentEngine(FusedEngine):
+    """Run an STProgram for ``n_iters`` iterations as ONE host dispatch.
+
+    Inherits the buffer/compile surface (``shardings``, ``init_buffers``,
+    ``compile``, ``lower``) from :class:`FusedEngine`; only the lowered
+    body (the device-resident loop) and the dispatch accounting differ.
+
+    Parameters
+    ----------
+    program:
+        The matched program; ``program.n_iters`` (see
+        :meth:`STProgram.persistent`) supplies the iteration count when
+        ``n_iters`` is not given.
+    n_iters:
+        Device-resident iteration count (>= 1).  Values > 1 are subject
+        to the same quiescence reuse-guard as ``STProgram.persistent``.
+    mode:
+        ``stream`` / ``dataflow`` — same ordering semantics as
+        :class:`FusedEngine`, applied to every pass.
+    double_buffer:
+        Alternate message-slot copies between iterations (default: on in
+        ``dataflow`` mode).  The loop is unrolled ×2 so consecutive
+        iterations coexist in the loop body and XLA may overlap them.
+    reduce_fn:
+        Optional ``fn(mem) -> scalar`` evaluated after every iteration
+        *inside* the device loop (use ``jax.lax.psum`` over the mesh
+        axes for a global value).  ``__call__`` then returns
+        ``(mem, reductions)`` with ``reductions.shape == (n_iters,)`` —
+        convergence traces without any host sync inside the loop.
+    """
+
+    def __init__(
+        self,
+        program: STProgram,
+        n_iters: Optional[int] = None,
+        mode: str = "stream",
+        double_buffer: Optional[bool] = None,
+        reduce_fn: Optional[Callable[[Dict[str, jax.Array]], jax.Array]] = None,
+        donate: bool = False,
+    ):
+        super().__init__(program, mode=mode, donate=donate)
+        self.n_iters = int(program.n_iters if n_iters is None else n_iters)
+        if self.n_iters < 1:
+            raise ValueError(f"n_iters must be >= 1, got {self.n_iters}")
+        # an explicit n_iters override must pass the same quiescence
+        # reuse-guard STProgram.persistent() enforces (raises QueueError)
+        program.persistent(self.n_iters)
+        self.double_buffer = (mode == "dataflow") if double_buffer is None \
+            else bool(double_buffer)
+        self.reduce_fn = reduce_fn
+        self._slots: Tuple[str, ...] = (
+            slot_buffers(program) if self.double_buffer else ()
+        )
+
+    # (__call__ inherited: FusedEngine already counts one dispatch per
+    # call — which here covers ALL n_iters iterations.)
+
+    # -- lowering -------------------------------------------------------------
+
+    def _build_jit(self):
+        prog = self.program
+        specs = {n: P(*s.pspec) for n, s in prog.buffers.items()}
+        out_specs = (specs, P()) if self.reduce_fn is not None else specs
+
+        body = functools.partial(
+            _run_persistent,
+            prog=prog,
+            mode=self.mode,
+            mesh_shape=self._mesh_shape,
+            n_iters=self.n_iters,
+            slots=self._slots,
+            reduce_fn=self.reduce_fn,
+            unroll=2 if (self.double_buffer and self.n_iters > 1) else 1,
+        )
+        sharded = shard_map(
+            body, mesh=self.mesh, in_specs=(specs,), out_specs=out_specs,
+            check_vma=False,
+        )
+        donate = (0,) if self.donate else ()
+        return jax.jit(sharded, donate_argnums=donate)
+
+
+# -- device-resident loop body (runs inside shard_map, traced once) ----------
+
+
+def _run_persistent(
+    mem: Dict[str, jax.Array],
+    *,
+    prog: STProgram,
+    mode: str,
+    mesh_shape: Dict[str, int],
+    n_iters: int,
+    slots: Tuple[str, ...],
+    reduce_fn,
+    unroll: int,
+):
+    mem = dict(mem)
+    # two copies of each message slot; iteration i uses copy i % 2
+    slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
+    token = counters.fresh_token()
+    comp = counters.fresh_token()
+    # None is an empty pytree node: no dead carry when reductions are off
+    red = jnp.zeros((n_iters,), jnp.float32) if reduce_fn is not None else None
+
+    def one_iter(i, carry):
+        mem, slot_mem, token, comp, red = carry
+        parity = jax.lax.rem(i, 2)
+        cur = dict(mem)
+        for n in slots:
+            cur[n] = jax.lax.dynamic_index_in_dim(
+                slot_mem[n], parity, axis=0, keepdims=False)
+        cur, token, comp = _interpret_program(
+            cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
+            token=token, comp_token=comp)
+        if reduce_fn is not None:  # sees every buffer, slots included
+            val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
+            red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
+        new_slots = {
+            n: jax.lax.dynamic_update_index_in_dim(
+                slot_mem[n], cur.pop(n), parity, axis=0)
+            for n in slots
+        }
+        return cur, new_slots, token, comp, red
+
+    mem, slot_mem, token, comp, red = jax.lax.fori_loop(
+        0, n_iters, one_iter, (mem, slot_mem, token, comp, red),
+        unroll=unroll)
+
+    # final values live in the slot the last iteration wrote
+    last = (n_iters - 1) % 2
+    for n in slots:
+        mem[n] = slot_mem[n][last]
+    if reduce_fn is not None:
+        return mem, red
+    return mem

@@ -25,6 +25,12 @@ This module builds that inner loop as an :class:`STQueue` program over a
   ``start`` per message (models unbatched triggering);
 * ``pack``: ``jnp`` slicing or the Pallas ``halo_pack`` kernel.
 
+For the *timed loop around* the inner exchange there are three control
+paths: per-op host dispatch (:mod:`.engine_host`), one dispatch per
+iteration (:mod:`.engine_fused`), and — via
+:func:`run_faces_persistent` / :mod:`.engine_persistent` — one dispatch
+for the whole N-iteration loop, device-resident.
+
 A pure-NumPy oracle (`faces_oracle`) computes the same update globally
 for correctness tests.
 """
@@ -220,6 +226,36 @@ def _emit_staged3(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
             region = _region_for(tuple(-x for x in d), cfg.points)
             q.enqueue_kernel(_make_unpack_fn(region, cfg.pack),
                              ["u", msg_in[d]], ["u"], name=f"unpack_s{stage}")
+
+
+# --------------------------------------------------------------------------
+# persistent (device-resident) timed loop
+# --------------------------------------------------------------------------
+
+
+def run_faces_persistent(cfg: FacesConfig, mesh, u0, n_iters: int,
+                         mode: str = "dataflow", reduce_fn=None,
+                         double_buffer: Optional[bool] = None):
+    """Run ``n_iters`` Faces iterations as ONE host dispatch.
+
+    Builds the inner-loop ST program, marks it persistent, and executes
+    it with :class:`~repro.core.engine_persistent.PersistentEngine` —
+    the fully offloaded variant of the paper's timed loop (the host
+    enqueues once; the device sequencer re-runs pack → trigger →
+    exchange → wait → unpack N times).
+
+    Returns ``(mem, stats)`` — final buffers and the engine's
+    dispatch-counting stats (``stats.dispatches == 1`` however large
+    ``n_iters`` is).  With ``reduce_fn`` set, returns
+    ``((mem, reductions), stats)`` exactly as the engine does.
+    """
+    from .engine_persistent import PersistentEngine
+
+    prog = build_faces_program(cfg, mesh).persistent(n_iters)
+    eng = PersistentEngine(prog, mode=mode, reduce_fn=reduce_fn,
+                           double_buffer=double_buffer)
+    out = eng(eng.init_buffers({"u": u0}))
+    return out, eng.stats
 
 
 # --------------------------------------------------------------------------

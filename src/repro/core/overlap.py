@@ -31,11 +31,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size as _compat_axis_size
+
 from . import counters
 
 
 def _axis_size(axis) -> int:
-    return jax.lax.axis_size(axis)
+    return _compat_axis_size(axis)
 
 
 def _shift_perm(n: int, delta: int):

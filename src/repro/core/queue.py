@@ -30,6 +30,10 @@ Semantics preserved from the paper:
   style blocking exists separately (``engine_host`` sync points);
 * no wildcards — matching is static (see :mod:`.matching`);
 * a queue may be reused across iterations (the program re-executes).
+  ``STProgram.persistent(n_iters)`` promotes that reuse to a device-
+  resident loop (one host dispatch for all iterations — see
+  :mod:`.engine_persistent`); it requires the queue to be *quiescent*
+  per pass (every started batch waited), which ``persistent`` enforces.
 """
 
 from __future__ import annotations
@@ -62,6 +66,11 @@ class STProgram:
     batches: Tuple[Batch, ...]
     mesh: Any  # jax.sharding.Mesh
     name: str = "st_program"
+    # Persistent-iteration metadata (MPIX_Queue reuse): how many times a
+    # single host dispatch re-executes the whole program on-device.  Set
+    # via :meth:`persistent`; engines other than PersistentEngine ignore
+    # it (they run one pass per dispatch).
+    n_iters: int = 1
 
     @property
     def n_batches(self) -> int:
@@ -70,6 +79,42 @@ class STProgram:
     @property
     def n_channels(self) -> int:
         return sum(len(b.channels) for b in self.batches)
+
+    @property
+    def is_persistent(self) -> bool:
+        return self.n_iters > 1
+
+    def persistent(self, n_iters: int) -> "STProgram":
+        """Mark the program for device-resident re-execution.
+
+        Returns a copy whose ``n_iters`` requests that an engine keep the
+        *entire* iteration loop on-device — the MPIX_Queue-reuse contract
+        ("a queue may be reused across iterations") delivered without a
+        host round-trip per iteration.
+
+        Reuse guards: re-execution is only well-defined when the queue is
+        *quiescent* at the end of a pass — a ``wait`` must follow the
+        final ``start`` so every triggered completion is observed before
+        the next pass begins (the completion counter is cumulative, so
+        one trailing wait covers all earlier batches; without it,
+        iteration i+1's triggers could fire against iteration i's
+        in-flight completions).
+        """
+        if n_iters < 1:
+            raise QueueError(f"persistent n_iters must be >= 1, got {n_iters}")
+        last_start = last_wait = -1
+        for i, d in enumerate(self.descriptors):
+            if isinstance(d, StartDesc):
+                last_start = i
+            elif isinstance(d, WaitDesc):
+                last_wait = i
+        if n_iters > 1 and last_start >= 0 and last_wait < last_start:
+            raise QueueError(
+                "persistent reuse of a non-quiescent queue: the final "
+                "enqueue_start has no following enqueue_wait; counters "
+                "would not agree across iterations"
+            )
+        return dataclasses.replace(self, n_iters=n_iters)
 
     def dispatch_count_host(self) -> int:
         """How many separate device dispatches the host-orchestrated
@@ -84,7 +129,13 @@ class STProgram:
         return n
 
     def dispatch_count_fused(self) -> int:
-        """The fused ST engine dispatches the whole program once."""
+        """The fused ST engine dispatches the whole program once (so a
+        Faces loop of N iterations costs N host dispatches)."""
+        return 1
+
+    def dispatch_count_persistent(self) -> int:
+        """The persistent engine dispatches once for ALL ``n_iters``
+        iterations — the device owns the loop, the host dispatches 1."""
         return 1
 
 

@@ -1,7 +1,16 @@
 """Launcher: production mesh, dry-run, training and serving drivers."""
 from .mesh import make_host_mesh, make_production_mesh
-from .steps import StepBundle, build_bundle, build_prefill_step, build_serve_step, build_train_step
+from .steps import (
+    StepBundle,
+    build_bundle,
+    build_persistent_train_step,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+    persistent_steps,
+)
 
 __all__ = ["make_production_mesh", "make_host_mesh", "StepBundle",
            "build_bundle", "build_train_step", "build_prefill_step",
-           "build_serve_step"]
+           "build_serve_step", "build_persistent_train_step",
+           "persistent_steps"]

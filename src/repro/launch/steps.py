@@ -233,6 +233,52 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                       in_sh, out_sh, input_sds)
 
 
+def persistent_steps(bundle: StepBundle, n_iters: int) -> StepBundle:
+    """Device-resident multi-step bundle: ONE host dispatch for
+    ``n_iters`` train steps.
+
+    The training-loop analogue of
+    :mod:`repro.core.engine_persistent`: the returned bundle's
+    ``step_fn`` wraps the original step in an on-device
+    ``jax.lax.fori_loop``, so params/optimizer state round-trip through
+    device memory — never the host — between inner steps.  The same
+    batch feeds every inner step (the synthetic-data regime the
+    dry-run/benchmarks use); metrics are the last step's.  Shardings and
+    input stand-ins are unchanged — the loop carries exactly the
+    step's (params, opt_state, metrics) signature.
+    """
+    if n_iters < 1:
+        raise ValueError(f"n_iters must be >= 1, got {n_iters}")
+    inner = bundle.step_fn
+
+    def persistent_step(params, opt_state, batch):
+        if n_iters == 1:
+            return inner(params, opt_state, batch)
+
+        # seed the metrics carry abstractly so the step traces ONCE (in
+        # the loop body), not twice in the compiled program
+        met_sd = jax.eval_shape(inner, params, opt_state, batch)[2]
+        met0 = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), met_sd)
+
+        def body(_, c):
+            p, o, _m = c
+            return inner(p, o, batch)
+
+        return jax.lax.fori_loop(0, n_iters, body,
+                                 (params, opt_state, met0))
+
+    return dataclasses.replace(bundle, step_fn=persistent_step)
+
+
+def build_persistent_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                                mesh: Mesh, n_iters: int,
+                                **kwargs) -> StepBundle:
+    """:func:`build_train_step`, then fold ``n_iters`` steps into one
+    dispatch via :func:`persistent_steps`."""
+    return persistent_steps(build_train_step(cfg, shape, mesh, **kwargs),
+                            n_iters)
+
+
 def build_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                  **kwargs) -> StepBundle:
     serve_window = cfg.serve_window if (shape.name == "long_500k") else 0

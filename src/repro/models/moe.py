@@ -26,6 +26,7 @@ import math
 from typing import Dict, Optional, Tuple
 
 import jax
+from repro.compat import shard_map
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -230,8 +231,8 @@ def apply_moe_ep(p, x, cfg: ModelConfig) -> Optional[Tuple[jax.Array, Dict]]:
                 dropped)
 
     out_specs = (x_spec, P(), P(None), P())
-    sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    sm = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
     rbias = p.get("router_bias", jnp.zeros((E,), jnp.float32))
     wi_v = _virtualize_in(p["wi"])
     wg_v = _virtualize_in(p["wg"]) if has_wg else wi_v

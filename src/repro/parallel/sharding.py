@@ -34,14 +34,14 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     behaviour-change warning; we use shard_map/pjit auto mode)."""
     import numpy as np
 
+    from repro.compat import auto_axis_types
+
     if devices is None:
         return jax.make_mesh(
-            tuple(shape), tuple(axes),
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+            tuple(shape), tuple(axes), **auto_axis_types(len(axes)),
         )
     dev = np.asarray(devices).reshape(tuple(shape))
-    return Mesh(dev, tuple(axes),
-                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return Mesh(dev, tuple(axes), **auto_axis_types(len(axes)))
 
 
 @dataclasses.dataclass(frozen=True)

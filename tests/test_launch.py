@@ -134,3 +134,76 @@ def test_production_mesh_requires_512_devices():
     from repro.launch.mesh import make_production_mesh
     with pytest.raises(ValueError):
         make_production_mesh()
+
+
+@pytest.mark.slow
+def test_persistent_step_bundle_matches_sequential(subproc):
+    """persistent_steps folds N train steps into one dispatch whose
+    result matches N sequential jitted steps (same batch regime)."""
+    r = subproc("""
+import numpy as np, jax
+from repro.configs.base import ShapeConfig, get_config
+from repro.data.synthetic import SyntheticTokens
+from repro.launch import build_persistent_train_step, build_train_step
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel import make_mesh
+
+cfg = get_config("qwen1.5-0.5b").smoke()
+mesh = make_mesh((1,), ("data",))
+shape = ShapeConfig("t", 8, 4, "train")
+b1 = build_train_step(cfg, shape, mesh)
+bN = build_persistent_train_step(cfg, shape, mesh, n_iters=3)
+params, _ = b1.model.init(jax.random.PRNGKey(0))
+opt_state = adamw_init(params, AdamWConfig())
+batch = {k: jax.numpy.asarray(v)
+         for k, v in SyntheticTokens(cfg, shape).batch(0).items()}
+with mesh:
+    p, o = params, opt_state
+    j1 = jax.jit(b1.step_fn)
+    for _ in range(3):
+        p, o, met = j1(p, o, batch)
+    pN, oN, metN = jax.jit(bN.step_fn)(params, opt_state, batch)
+np.testing.assert_allclose(float(met["loss"]), float(metN["loss"]), rtol=1e-4)
+for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(pN)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=2e-3, atol=2e-3)
+print("persistent bundle ok")
+""", devices=1)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "persistent bundle ok" in r.stdout
+
+
+def test_persistent_steps_validates_and_wraps():
+    """Fast checks: n_iters guard + the fori_loop wrap itself, on a toy
+    StepBundle (no model compile) — N wrapped steps == N sequential."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import StepBundle, persistent_steps
+
+    def toy_step(params, opt_state, batch):
+        new_p = params + batch
+        return new_p, opt_state + 1, {"loss": jnp.sum(new_p)}
+
+    bundle = StepBundle(cfg=None, shape=None, mesh=None, rules=None,
+                        model=None, step_fn=toy_step, in_shardings=None,
+                        out_shardings=None, input_sds=())
+
+    with pytest.raises(ValueError):
+        persistent_steps(bundle, 0)
+
+    wrapped = persistent_steps(bundle, 3)
+    assert wrapped is not bundle and wrapped.model is bundle.model
+    p0, o0, b = jnp.zeros(4), jnp.int32(0), jnp.ones(4)
+    pN, oN, met = jax.jit(wrapped.step_fn)(p0, o0, b)
+    p, o = p0, o0
+    for _ in range(3):
+        p, o, want = toy_step(p, o, b)
+    np.testing.assert_allclose(np.asarray(pN), np.asarray(p))
+    assert int(oN) == int(o) == 3
+    np.testing.assert_allclose(float(met["loss"]), float(want["loss"]))
+
+    # n_iters=1 short-circuits without a loop
+    p1, o1, _ = persistent_steps(bundle, 1).step_fn(p0, o0, b)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p0 + b))

@@ -1,0 +1,146 @@
+"""core/overlap.py — decomposed collectives vs their jax.lax references.
+
+Fast lane: single-device trivial paths (axis size 1 short-circuits) and
+the `triggered` ST wrapper.  Slow lane: per-collective subprocess tests
+on an 8-device mesh (finer-grained than the combined check in
+tests/test_distributed.py, so a regression names the exact collective).
+"""
+
+import numpy as np
+import pytest
+
+
+def _smap1(f, in_specs, out_specs):
+    from repro.compat import jit_shard_map
+    from repro.parallel import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    return jit_shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
+
+
+# -- trivial paths (fast, single device) --------------------------------------
+
+
+def test_single_device_paths_are_identity():
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import overlap
+
+    x = np.random.RandomState(0).randn(8, 4).astype(np.float32)
+    for fn in (
+        partial(overlap.all_gather_ring, axis="x"),
+        partial(overlap.all_gather_ring, axis="x", bidirectional=False),
+        partial(overlap.reduce_scatter_ring, axis="x"),
+        partial(overlap.all_to_all_ppermute, axis="x"),
+    ):
+        got = _smap1(fn, (P("x"),), P("x"))(x)
+        np.testing.assert_allclose(np.asarray(got), x, rtol=1e-6)
+
+
+def test_all_gather_matmul_single_device():
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import overlap
+
+    rng = np.random.RandomState(1)
+    x = rng.randn(8, 4).astype(np.float32)
+    w = rng.randn(4, 3).astype(np.float32)
+    got = _smap1(partial(overlap.all_gather_matmul, axis="x"),
+                 (P("x"), P()), P("x"))(x, w)
+    np.testing.assert_allclose(np.asarray(got), x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_triggered_wrapper_preserves_values():
+    import jax.numpy as jnp
+
+    from repro.core import fresh_token, overlap
+
+    token = fresh_token()
+    fn = overlap.triggered(lambda v: v * 2.0, token)
+    out = fn(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(out), [0.0, 2.0, 4.0, 6.0])
+
+
+# -- 8-device references (subprocess, slow lane) ------------------------------
+
+_PRELUDE = """
+import numpy as np, jax, jax.numpy as jnp
+from functools import partial
+from repro.compat import jit_shard_map
+from repro.core import overlap
+from repro.parallel import make_mesh
+from jax.sharding import PartitionSpec as P
+mesh = make_mesh((8,), ("x",))
+def smap(f, in_specs, out_specs):
+    return jit_shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
+"""
+
+
+def _check(subproc, code):
+    r = subproc(_PRELUDE + code)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bidirectional", [False, True])
+def test_all_gather_ring_matches_lax(subproc, bidirectional):
+    _check(subproc, f"""
+x = np.random.RandomState(0).randn(32, 16).astype(np.float32)
+got = smap(partial(overlap.all_gather_ring, axis="x",
+                   bidirectional={bidirectional}), (P("x"),), P())(x)
+want = smap(lambda v: jax.lax.all_gather(v, "x", axis=0, tiled=True),
+            (P("x"),), P())(x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+np.testing.assert_allclose(np.asarray(got), x, rtol=1e-6)
+""")
+
+
+@pytest.mark.slow
+def test_reduce_scatter_ring_matches_lax(subproc):
+    _check(subproc, """
+x = np.random.RandomState(1).randn(32, 16).astype(np.float32)
+got = smap(partial(overlap.reduce_scatter_ring, axis="x"),
+           (P(None, None),), P("x"))(x)
+want = smap(lambda v: jax.lax.psum_scatter(v, "x", scatter_dimension=0,
+                                           tiled=True),
+            (P(None, None),), P("x"))(x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                           atol=1e-5)
+""")
+
+
+@pytest.mark.slow
+def test_all_to_all_ppermute_matches_lax(subproc):
+    _check(subproc, """
+x = np.random.RandomState(2).randn(64, 4).astype(np.float32)
+got = smap(partial(overlap.all_to_all_ppermute, axis="x"),
+           (P("x"),), P("x"))(x)
+want = smap(lambda v: jax.lax.all_to_all(v, "x", split_axis=0,
+                                         concat_axis=0, tiled=True),
+            (P("x"),), P("x"))(x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+""")
+
+
+@pytest.mark.slow
+def test_overlapped_matmuls_match_references(subproc):
+    _check(subproc, """
+rng = np.random.RandomState(3)
+x = rng.randn(32, 16).astype(np.float32)
+w = rng.randn(16, 8).astype(np.float32)
+got = smap(partial(overlap.all_gather_matmul, axis="x"),
+           (P("x"), P()), P())(x, w)
+np.testing.assert_allclose(np.asarray(got), x @ w, rtol=1e-4, atol=1e-5)
+
+xk = rng.randn(32, 64).astype(np.float32)
+wk = rng.randn(64, 8).astype(np.float32)
+got = smap(partial(overlap.matmul_reduce_scatter, axis="x"),
+           (P(None, "x"), P("x")), P("x"))(xk, wk)
+np.testing.assert_allclose(np.asarray(got), xk @ wk, rtol=1e-4, atol=1e-4)
+""")

@@ -1,0 +1,313 @@
+"""PersistentEngine — device-resident N-iteration execution.
+
+Fast lane: single-device (1,1,1 periodic grid — every neighbor is the
+rank itself, so real channels fire) correctness vs N sequential
+HostEngine executions and an N-step oracle loop, dispatch accounting,
+the queue-reuse guards, and the static slot analysis.
+
+Slow lane: the same contrasts on a real 2×2×2 8-device grid across
+granularity × batched (subprocess, like tests/test_distributed.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacesConfig,
+    HostEngine,
+    PersistentEngine,
+    QueueError,
+    build_faces_program,
+    faces_oracle,
+)
+from repro.core.engine_persistent import slot_buffers
+from repro.core.halo import AXES3, run_faces_persistent
+
+
+def _mesh111():
+    from repro.parallel import make_mesh
+    return make_mesh((1, 1, 1), AXES3)
+
+
+def _u0(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randn(*cfg.grid, *cfg.points).astype(np.float32)
+
+
+def _host_n_iters(prog, u0, n):
+    host = HostEngine(prog)
+    mem = host.init_buffers({"u": u0})
+    for _ in range(n):
+        mem = host(mem)
+    return mem, host.stats
+
+
+def _oracle_n_iters(u0, cfg, n):
+    ref = np.asarray(u0)
+    for _ in range(n):
+        ref = faces_oracle(ref, cfg)
+    return ref
+
+
+# -- correctness (fast, single device) ---------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["stream", "dataflow"])
+@pytest.mark.parametrize("batched", [True, False])
+def test_persistent_matches_host_and_oracle_1dev(mode, batched):
+    n = 4
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 3, 5), periodic=True,
+                      batched=batched)
+    prog = build_faces_program(cfg, _mesh111()).persistent(n)
+    u0 = _u0(cfg)
+
+    eng = PersistentEngine(prog, mode=mode)
+    out = eng(eng.init_buffers({"u": u0}))
+
+    host_mem, _ = _host_n_iters(prog, u0, n)
+    np.testing.assert_allclose(np.asarray(out["u"]),
+                               np.asarray(host_mem["u"]),
+                               rtol=1e-5, atol=1e-5)
+    ref = _oracle_n_iters(u0, cfg, n)
+    np.testing.assert_allclose(np.asarray(out["u"]), ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_persistent_single_iteration_equals_host():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+    prog = build_faces_program(cfg, _mesh111())
+    u0 = _u0(cfg)
+    eng = PersistentEngine(prog, n_iters=1)
+    out = eng(eng.init_buffers({"u": u0}))
+    host_mem, _ = _host_n_iters(prog, u0, 1)
+    np.testing.assert_allclose(np.asarray(out["u"]),
+                               np.asarray(host_mem["u"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_persistent_double_buffer_equivalent():
+    """Double-buffered slots must not change results (dataflow mode)."""
+    n = 5
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+    prog = build_faces_program(cfg, _mesh111()).persistent(n)
+    u0 = _u0(cfg, seed=3)
+    a = PersistentEngine(prog, mode="dataflow", double_buffer=True)
+    b = PersistentEngine(prog, mode="dataflow", double_buffer=False)
+    out_a = a(a.init_buffers({"u": u0}))
+    out_b = b(b.init_buffers({"u": u0}))
+    for k in out_a:
+        np.testing.assert_allclose(np.asarray(out_a[k]),
+                                   np.asarray(out_b[k]),
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+# -- dispatch accounting ------------------------------------------------------
+
+
+def test_one_dispatch_for_n_iterations():
+    n = 6
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+    prog = build_faces_program(cfg, _mesh111()).persistent(n)
+    eng = PersistentEngine(prog)
+    assert eng.stats.dispatches == 0
+    eng(eng.init_buffers({"u": _u0(cfg)}))
+    assert eng.stats.dispatches == 1          # ONE dispatch, N iterations
+    assert eng.stats.sync_points == 0         # no host sync inside the loop
+    assert prog.dispatch_count_persistent() == 1
+
+    # the same N iterations cost the host engine N * per-iter dispatches
+    _, host_stats = _host_n_iters(prog, _u0(cfg), n)
+    assert host_stats.dispatches == n * prog.dispatch_count_host()
+    assert host_stats.dispatches > eng.stats.dispatches
+
+
+# -- per-iteration reduction (no host sync) -----------------------------------
+
+
+def test_per_iteration_reduction_trace():
+    import jax
+    import jax.numpy as jnp
+
+    n = 4
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 4, 2), periodic=True)
+    prog = build_faces_program(cfg, _mesh111()).persistent(n)
+    u0 = _u0(cfg, seed=7)
+
+    def sq_norm(mem):
+        return jax.lax.psum(jnp.sum(mem["u"].astype(jnp.float32) ** 2), AXES3)
+
+    eng = PersistentEngine(prog, reduce_fn=sq_norm)
+    out, red = eng(eng.init_buffers({"u": u0}))
+    assert red.shape == (n,)
+
+    # reference: host engine, norm recorded after every iteration
+    host = HostEngine(prog)
+    mem = host.init_buffers({"u": u0})
+    want = []
+    for _ in range(n):
+        mem = host(mem)
+        want.append(float(np.sum(np.asarray(mem["u"], np.float64) ** 2)))
+    np.testing.assert_allclose(np.asarray(red, np.float64), want, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(out["u"]), np.asarray(mem["u"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_reduction_may_read_slot_buffers():
+    """reduce_fn sees the full buffer dict, message slots included, even
+    when those slots are double-buffered (dataflow mode default)."""
+    import jax
+    import jax.numpy as jnp
+
+    n = 3
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+    prog = build_faces_program(cfg, _mesh111()).persistent(n)
+    u0 = _u0(cfg, seed=5)
+
+    def recv_norm(mem):
+        return jax.lax.psum(jnp.sum(mem["in0"] ** 2), AXES3)
+
+    vals = {}
+    for db in (True, False):
+        eng = PersistentEngine(prog, mode="dataflow", double_buffer=db,
+                               reduce_fn=recv_norm)
+        assert (len(eng._slots) > 0) == db
+        _, red = eng(eng.init_buffers({"u": u0}))
+        vals[db] = np.asarray(red)
+    np.testing.assert_allclose(vals[True], vals[False], rtol=1e-5)
+
+
+# -- queue-reuse guards & metadata -------------------------------------------
+
+
+def test_persistent_metadata_roundtrip():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3))
+    prog = build_faces_program(cfg, _mesh111())
+    assert prog.n_iters == 1 and not prog.is_persistent
+    p = prog.persistent(8)
+    assert p.n_iters == 8 and p.is_persistent
+    assert prog.n_iters == 1  # original untouched (immutable metadata)
+    # engine picks the program's count up when not overridden
+    assert PersistentEngine(p).n_iters == 8
+    assert PersistentEngine(p, n_iters=3).n_iters == 3
+
+
+def test_persistent_rejects_bad_iteration_count():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3))
+    prog = build_faces_program(cfg, _mesh111())
+    with pytest.raises(QueueError):
+        prog.persistent(0)
+    with pytest.raises(ValueError):
+        PersistentEngine(prog, n_iters=0)
+
+
+def test_persistent_rejects_non_quiescent_queue():
+    """A started-but-never-waited batch cannot be re-executed on-device:
+    the counters would disagree across iterations."""
+    from repro.core import OffsetPeer, STQueue
+    from repro.parallel import make_mesh
+
+    q = STQueue(make_mesh((1,), ("x",)), name="nq")
+    q.buffer("a", (4,), np.float32, pspec=("x",))
+    q.buffer("b", (4,), np.float32, pspec=("x",))
+    q.enqueue_send("a", OffsetPeer("x", 1, periodic=True), tag=0)
+    q.enqueue_recv("b", OffsetPeer("x", -1, periodic=True), tag=0)
+    q.enqueue_start()          # no enqueue_wait: non-quiescent
+    prog = q.build()
+    with pytest.raises(QueueError, match="quiescent"):
+        prog.persistent(4)
+    # the engine-level n_iters override goes through the same guard
+    with pytest.raises(QueueError, match="quiescent"):
+        PersistentEngine(prog, n_iters=4)
+    assert prog.persistent(1).n_iters == 1  # single pass is always fine
+    assert PersistentEngine(prog, n_iters=1).n_iters == 1
+
+
+# -- static slot analysis -----------------------------------------------------
+
+
+def test_slot_analysis_picks_message_buffers_only():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3))
+    prog = build_faces_program(cfg, _mesh111())
+    slots = slot_buffers(prog)
+    assert "u" not in slots                   # the field carries state
+    # every message staging buffer qualifies (packed before sent;
+    # replace-deposited before unpacked)
+    msg_bufs = {b for b in prog.buffers if b.startswith(("in", "out"))}
+    assert set(slots) == msg_bufs
+
+
+def test_slot_analysis_excludes_add_mode_and_carried_state():
+    from repro.core import OffsetPeer, STQueue
+    from repro.parallel import make_mesh
+
+    q = STQueue(make_mesh((1,), ("x",)), name="addq")
+    q.buffer("state", (4,), np.float32, pspec=("x",))
+    q.buffer("src", (4,), np.float32, pspec=("x",))
+    q.buffer("acc", (4,), np.float32, pspec=("x",))
+    # pack-style: src is produced fresh from state every pass
+    q.enqueue_kernel(lambda s: s * 2.0, ["state"], ["src"], name="pack")
+    q.enqueue_recv("acc", OffsetPeer("x", -1, periodic=True), tag=0, mode="add")
+    q.enqueue_send("src", OffsetPeer("x", 1, periodic=True), tag=0)
+    q.enqueue_start()
+    q.enqueue_wait()
+    slots = slot_buffers(q.build())
+    assert "acc" not in slots    # add-mode: accumulates across iterations
+    assert "state" not in slots  # read first: carries state
+    assert "src" in slots        # rewritten by the pack before the send
+
+
+# -- halo front-end -----------------------------------------------------------
+
+
+def test_run_faces_persistent_front_end():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+    u0 = _u0(cfg, seed=11)
+    mem, stats = run_faces_persistent(cfg, _mesh111(), u0, n_iters=3)
+    assert stats.dispatches == 1
+    ref = _oracle_n_iters(u0, cfg, 3)
+    np.testing.assert_allclose(np.asarray(mem["u"]), ref, rtol=1e-4, atol=1e-4)
+
+
+# -- multi-device matrix (subprocess, slow lane) ------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("granularity", ["direct26", "staged3"])
+@pytest.mark.parametrize("batched", [True, False])
+def test_persistent_matches_host_8dev(subproc, granularity, batched):
+    r = subproc(f"""
+import numpy as np
+from repro.core import (FacesConfig, HostEngine, PersistentEngine,
+                        build_faces_program, faces_oracle)
+from repro.parallel import make_mesh
+
+N = 3
+mesh = make_mesh((2, 2, 2), ("gx", "gy", "gz"))
+cfg = FacesConfig(grid=(2, 2, 2), points=(4, 4, 4),
+                  granularity={granularity!r}, batched={batched})
+prog = build_faces_program(cfg, mesh).persistent(N)
+u0 = np.random.RandomState(0).randn(2, 2, 2, 4, 4, 4).astype(np.float32)
+
+host = HostEngine(prog)
+hmem = host.init_buffers({{"u": u0}})
+for _ in range(N):
+    hmem = host(hmem)
+
+for mode in ("stream", "dataflow"):
+    eng = PersistentEngine(prog, mode=mode)
+    out = eng(eng.init_buffers({{"u": u0}}))
+    np.testing.assert_allclose(np.asarray(out["u"]), np.asarray(hmem["u"]),
+                               rtol=1e-4, atol=1e-4)
+    assert eng.stats.dispatches == 1
+
+if cfg.granularity == "direct26":
+    ref = u0
+    for _ in range(N):
+        ref = faces_oracle(ref, cfg)
+    np.testing.assert_allclose(np.asarray(hmem["u"]), ref,
+                               rtol=1e-4, atol=1e-4)
+assert host.stats.dispatches == N * prog.dispatch_count_host()
+print("persistent 8dev OK")
+""")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "persistent 8dev OK" in r.stdout

@@ -208,9 +208,91 @@ def fig_persistent(inner=None):
     return rows
 
 
+def fig_convergence(tols=(1e-1, 1e-2, 1e-3), max_iters=None):
+    """Convergence loop: host-polled stopping vs device-resident while_loop."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (
+        FacesConfig, FusedEngine, PersistentEngine, build_faces_program,
+        global_residual_fn,
+    )
+    from repro.parallel import make_mesh
+
+    max_iters = max_iters or _cfg_env("FACES_MAX_ITERS", 64)
+    grid, points = (2, 2, 2), (12, 12, 12)
+    mesh = make_mesh(grid, ("gx", "gy", "gz"))
+    # damping=0.12 makes the damped Faces update a contraction on this
+    # grid: tols (1e-1, 1e-2, 1e-3) realize ~1 / 3 / 11 iterations
+    cfg = FacesConfig(grid=grid, points=points, damping=0.12)
+    rng = np.random.RandomState(0)
+    u0 = rng.randn(*grid, *points).astype(np.float32)
+    residual = global_residual_fn(cfg)
+
+    # host-polled baseline: one dispatch per iteration, and the host
+    # fetches the residual after EACH iteration to decide whether to
+    # stop — the control-path round-trip the ST model removes.
+    prog = build_faces_program(cfg, mesh)
+    fused = FusedEngine(prog, mode="dataflow")
+    poll = jax.jit(
+        lambda u: jnp.sqrt(jnp.sum(jnp.square(u.astype(jnp.float32)))
+                           / cfg.n_points))
+
+    for tol in tols:
+        # device-resident: the while_loop owns termination (ONE dispatch)
+        pprog = build_faces_program(cfg, mesh).persistent(
+            max_iters, until=lambda r, tol=tol: r >= tol)
+        pers = PersistentEngine(pprog, mode="dataflow", reduce_fn=residual)
+        mem0 = pers.init_buffers({"u": u0})
+
+        # warm every compile outside the timed sections
+        mem = fused.init_buffers({"u": u0})
+        fused(dict(mem))
+        float(poll(mem["u"]))
+        pers(dict(mem0))
+
+        fused.stats.reset()
+        t0 = time.perf_counter()
+        mem = fused.init_buffers({"u": u0})
+        host_iters = 0
+        while host_iters < max_iters:
+            mem = fused(mem)
+            host_iters += 1
+            if float(poll(mem["u"])) < tol:  # host sync, every iteration
+                break
+        host_s = time.perf_counter() - t0
+        host_dispatches = fused.stats.dispatches
+
+        pers.stats.reset()
+        t0 = time.perf_counter()
+        _, res, n_done = pers(dict(mem0))
+        n_done = int(n_done)  # the single host read, after convergence
+        dev_s = time.perf_counter() - t0
+
+        # the two residuals are differently-ordered float reductions
+        # (sharded psum vs one host-side sum): allow a one-iteration
+        # disagreement at a tolerance boundary
+        assert pers.stats.dispatches == 1 and abs(n_done - host_iters) <= 1, (
+            pers.stats.dispatches, n_done, host_iters)
+        for name, secs, iters, disp, syncs in (
+                ("host_polled", host_s, host_iters, host_dispatches,
+                 host_iters),
+                ("device_resident", dev_s, n_done, 1, 0)):
+            RESULTS.append({
+                "bench": "faces_convergence", "variant": name,
+                "us_per_call": secs * 1e6,
+                "derived": f"tol={tol:g};iters={iters};dispatches={disp};"
+                           f"host_syncs={syncs}",
+            })
+            print(f"  conv   tol={tol:<7g} {name:16s} iters={iters:3d} "
+                  f"dispatches={disp:3d} host_syncs={syncs:3d} "
+                  f"wall={secs*1e3:8.2f}ms")
+    return RESULTS
+
+
 def run_all():
     print("Faces microbenchmark (paper §V; 8 host devices)")
-    for fn in (fig8, fig9, fig10, fig11, fig12, fig_persistent):
+    for fn in (fig8, fig9, fig10, fig11, fig12, fig_persistent,
+               fig_convergence):
         print(f"-- {fn.__name__}: {fn.__doc__.splitlines()[0]}")
         fn()
     return RESULTS

@@ -1,5 +1,11 @@
 """Smoke the persistent engine on 8 host devices: N Faces iterations as
-ONE host dispatch, vs the host engine's N × per-op dispatches."""
+ONE host dispatch, vs the host engine's N × per-op dispatches.
+
+``--converge`` additionally smokes the predicate-terminated loop: the
+device iterates a damped (contracting) Faces update until the global
+residual drops below tolerance — still one dispatch, with the realized
+iteration count and the residual trace read back afterwards."""
+import argparse
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
@@ -9,9 +15,14 @@ import jax.numpy as jnp
 
 from repro.core import (
     FacesConfig, HostEngine, PersistentEngine, build_faces_program,
-    faces_oracle,
+    faces_oracle, run_faces_until_converged,
 )
 from repro.core.halo import AXES3
+
+args = argparse.ArgumentParser()
+args.add_argument("--converge", action="store_true",
+                  help="also smoke the until-converged while_loop path")
+args = args.parse_args()
 
 N = 5
 mesh = jax.make_mesh((2, 2, 2), AXES3)
@@ -50,4 +61,23 @@ eng = PersistentEngine(prog, mode="dataflow", reduce_fn=sq_norm)
 out, residuals = eng(eng.init_buffers({"u": u0}))
 print("residual trace:", [f"{float(r):.3e}" for r in np.asarray(residuals)])
 assert residuals.shape == (N,)
+
+if args.converge:
+    # device-resident termination: while residual >= tol, bounded
+    ccfg = FacesConfig(grid=(2, 2, 2), points=(5, 4, 3), damping=0.12)
+    tol, max_iters = 1e-3, 40
+    mem, res, n_done, stats = run_faces_until_converged(
+        ccfg, mesh, u0, tol=tol, max_iters=max_iters)
+    print(f"converged in {n_done} iters (bound {max_iters}), "
+          f"dispatches={stats.dispatches}, "
+          f"trace={[f'{r:.2e}' for r in res]}")
+    assert stats.dispatches == 1 and stats.sync_points == 0
+    assert 1 <= n_done < max_iters and res[-1] < tol
+    cref = u0
+    for _ in range(n_done):
+        cref = faces_oracle(cref, ccfg)
+    np.testing.assert_allclose(np.asarray(mem["u"]), cref,
+                               rtol=1e-4, atol=1e-5)
+    print("CONVERGENCE SMOKE PASS")
+
 print("PERSISTENT SMOKE PASS")

@@ -46,7 +46,9 @@ from .halo import (
     FacesConfig,
     build_faces_program,
     faces_oracle,
+    global_residual_fn,
     run_faces_persistent,
+    run_faces_until_converged,
 )
 from .matching import Batch, Channel, MatchError, match_batch
 from .queue import QueueError, STProgram, STQueue, create_queue
@@ -60,6 +62,7 @@ __all__ = [
     "TriggerCounter", "CompletionCounter", "fresh_token", "bump", "tie",
     "gate", "completion_from",
     "FacesConfig", "build_faces_program", "faces_oracle",
-    "run_faces_persistent",
+    "run_faces_persistent", "run_faces_until_converged",
+    "global_residual_fn",
     "DIRECTIONS", "FACES", "EDGES", "CORNERS",
 ]

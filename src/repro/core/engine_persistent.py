@@ -37,11 +37,36 @@ it is touched by a channel/collective and its first access in execution
 order is a write (replace-mode deposits count as writes; add-mode
 deposits accumulate across iterations and disqualify the buffer).
 
+Convergence termination (``cond_fn`` / ``until``)
+-------------------------------------------------
+A convergence-style solver (the Nekbone/Faces regime) cannot know
+``n_iters`` up front — the classic implementation round-trips a
+residual to the host every iteration to decide when to stop, which is
+exactly the host-in-the-control-path cost the ST model removes.  With
+``cond_fn`` set (or ``STProgram.persistent(n, until=...)``), the fixed
+``fori_loop`` becomes a ``jax.lax.while_loop``:
+
+* each iteration evaluates ``reduce_fn`` (required) into a scalar and
+  feeds it to ``cond_fn(reduction) -> bool``; the loop continues while
+  the predicate holds (e.g. ``residual >= tol``), bounded by
+  ``max_iters``.  The first iteration always runs (there is no
+  reduction to test before it).
+* double buffering switches to its *carried-predicate* variant: slot
+  parity comes from a carried iteration counter (``i % 2`` with ``i``
+  in the loop carry — a ``while_loop`` has no induction variable and no
+  static unroll), and the final-slot selection uses the **dynamic**
+  last parity ``(realized - 1) % 2`` instead of the static
+  ``(n_iters - 1) % 2``.
+* ``__call__`` returns ``(mem, reductions, n_done)``: the reduction
+  trace padded with zeros to ``max_iters`` plus the realized iteration
+  count — still ONE host dispatch and zero host syncs until converged.
+
 Dispatch accounting
 -------------------
 ``stats`` is a :class:`~repro.core.engine_host.HostStats`: one call =
-one dispatch, zero host sync points, regardless of ``n_iters`` — the
-contrast :mod:`benchmarks.faces_bench` reports against the host
+one dispatch, zero host sync points, regardless of ``n_iters`` (or of
+how many iterations a ``cond_fn`` loop realizes) — the contrast
+:mod:`benchmarks.faces_bench` reports against the host
 (``n_iters × dispatch_count_host()``) and fused (``n_iters × 1``)
 engines.
 """
@@ -137,6 +162,19 @@ class PersistentEngine(FusedEngine):
         axes for a global value).  ``__call__`` then returns
         ``(mem, reductions)`` with ``reductions.shape == (n_iters,)`` —
         convergence traces without any host sync inside the loop.
+        Required when ``cond_fn`` is set.
+    cond_fn:
+        Optional termination predicate ``fn(reduction) -> bool`` (e.g.
+        ``lambda residual: residual >= tol``) evaluated on each
+        iteration's reduction *inside* the device loop; the loop
+        continues while it returns True, bounded by ``max_iters``.
+        Defaults to ``program.until``.  ``__call__`` then returns
+        ``(mem, reductions, n_done)`` with ``reductions`` zero-padded to
+        ``max_iters`` and ``n_done`` the realized iteration count.
+    max_iters:
+        Safety bound for ``cond_fn`` loops (defaults to
+        ``n_iters`` / ``program.n_iters``).  Only meaningful with a
+        predicate.
     """
 
     def __init__(
@@ -146,15 +184,27 @@ class PersistentEngine(FusedEngine):
         mode: str = "stream",
         double_buffer: Optional[bool] = None,
         reduce_fn: Optional[Callable[[Dict[str, jax.Array]], jax.Array]] = None,
+        cond_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+        max_iters: Optional[int] = None,
         donate: bool = False,
     ):
         super().__init__(program, mode=mode, donate=donate)
-        self.n_iters = int(program.n_iters if n_iters is None else n_iters)
+        self.cond_fn = cond_fn if cond_fn is not None else program.until
+        if max_iters is not None and self.cond_fn is None:
+            raise ValueError("max_iters is only meaningful with cond_fn/until")
+        if max_iters is None:
+            max_iters = program.n_iters if n_iters is None else n_iters
+        self.n_iters = self.max_iters = int(max_iters)
         if self.n_iters < 1:
             raise ValueError(f"n_iters must be >= 1, got {self.n_iters}")
-        # an explicit n_iters override must pass the same quiescence
-        # reuse-guard STProgram.persistent() enforces (raises QueueError)
-        program.persistent(self.n_iters)
+        if self.cond_fn is not None and reduce_fn is None:
+            raise ValueError(
+                "cond_fn requires reduce_fn: the termination predicate is "
+                "evaluated on the per-iteration scalar reduction")
+        # an explicit n_iters/cond_fn override must pass the same
+        # quiescence reuse-guard STProgram.persistent() enforces
+        # (raises QueueError)
+        program.persistent(self.n_iters, until=self.cond_fn)
         self.double_buffer = (mode == "dataflow") if double_buffer is None \
             else bool(double_buffer)
         self.reduce_fn = reduce_fn
@@ -170,18 +220,31 @@ class PersistentEngine(FusedEngine):
     def _build_jit(self):
         prog = self.program
         specs = {n: P(*s.pspec) for n, s in prog.buffers.items()}
-        out_specs = (specs, P()) if self.reduce_fn is not None else specs
 
-        body = functools.partial(
-            _run_persistent,
-            prog=prog,
-            mode=self.mode,
-            mesh_shape=self._mesh_shape,
-            n_iters=self.n_iters,
-            slots=self._slots,
-            reduce_fn=self.reduce_fn,
-            unroll=2 if (self.double_buffer and self.n_iters > 1) else 1,
-        )
+        if self.cond_fn is not None:
+            out_specs = (specs, P(), P())
+            body = functools.partial(
+                _run_persistent_while,
+                prog=prog,
+                mode=self.mode,
+                mesh_shape=self._mesh_shape,
+                max_iters=self.max_iters,
+                slots=self._slots,
+                reduce_fn=self.reduce_fn,
+                cond_fn=self.cond_fn,
+            )
+        else:
+            out_specs = (specs, P()) if self.reduce_fn is not None else specs
+            body = functools.partial(
+                _run_persistent,
+                prog=prog,
+                mode=self.mode,
+                mesh_shape=self._mesh_shape,
+                n_iters=self.n_iters,
+                slots=self._slots,
+                reduce_fn=self.reduce_fn,
+                unroll=2 if (self.double_buffer and self.n_iters > 1) else 1,
+            )
         sharded = shard_map(
             body, mesh=self.mesh, in_specs=(specs,), out_specs=out_specs,
             check_vma=False,
@@ -243,3 +306,68 @@ def _run_persistent(
     if reduce_fn is not None:
         return mem, red
     return mem
+
+
+def _run_persistent_while(
+    mem: Dict[str, jax.Array],
+    *,
+    prog: STProgram,
+    mode: str,
+    mesh_shape: Dict[str, int],
+    max_iters: int,
+    slots: Tuple[str, ...],
+    reduce_fn,
+    cond_fn,
+):
+    """Predicate-terminated variant: ``lax.while_loop`` until
+    ``cond_fn(reduction)`` goes False (or ``max_iters`` is hit).
+
+    The carry threads the iteration counter explicitly (a while_loop has
+    no induction variable), so slot parity is the *carried* ``i % 2``
+    and the final-slot selection below uses the dynamic last parity —
+    the realized iteration count is a runtime value here.
+    """
+    mem = dict(mem)
+    # two copies of each message slot; iteration i uses copy i % 2
+    slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
+    token = counters.fresh_token()
+    comp = counters.fresh_token()
+    red = jnp.zeros((max_iters,), jnp.float32)
+
+    def cond(carry):
+        i, keep_going, *_ = carry
+        return jnp.logical_and(keep_going, i < max_iters)
+
+    def body(carry):
+        i, _, mem, slot_mem, token, comp, red = carry
+        parity = jax.lax.rem(i, 2)
+        cur = dict(mem)
+        for n in slots:
+            cur[n] = jax.lax.dynamic_index_in_dim(
+                slot_mem[n], parity, axis=0, keepdims=False)
+        cur, token, comp = _interpret_program(
+            cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
+            token=token, comp_token=comp)
+        val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
+        red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
+        new_slots = {
+            n: jax.lax.dynamic_update_index_in_dim(
+                slot_mem[n], cur.pop(n), parity, axis=0)
+            for n in slots
+        }
+        keep_going = jnp.asarray(cond_fn(val), jnp.bool_).reshape(())
+        return i + 1, keep_going, cur, new_slots, token, comp, red
+
+    # the first iteration always runs: there is no reduction to test yet
+    carry0 = (jnp.zeros((), jnp.int32), jnp.asarray(True),
+              mem, slot_mem, token, comp, red)
+    n_done, _, mem, slot_mem, token, comp, red = jax.lax.while_loop(
+        cond, body, carry0)
+
+    # final values live in the slot the last *realized* iteration wrote —
+    # a dynamic parity, unlike the fixed-n_iters loop above
+    last = jax.lax.rem(n_done - 1, 2)
+    for n in slots:
+        mem[n] = jax.lax.dynamic_index_in_dim(
+            slot_mem[n], last, axis=0, keepdims=False)
+    return mem, red, n_done

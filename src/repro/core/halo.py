@@ -73,11 +73,21 @@ class FacesConfig:
     pack: str = "jnp"              # jnp | pallas
     periodic: bool = False
     interior_compute: bool = True  # include the overlap kernel (step 4)
+    # Relaxation factor applied to the whole field at the end of every
+    # iteration (0 → off).  With 0 < damping < ~0.3 the combined
+    # smooth + boundary-sum + scale update is a contraction, so the
+    # field norm decays geometrically — the substrate for the
+    # convergence-terminated (until-residual<tol) persistent loop.
+    damping: float = 0.0
 
     @property
     def n_ranks(self) -> int:
         gx, gy, gz = self.grid
         return gx * gy * gz
+
+    @property
+    def n_points(self) -> int:
+        return self.n_ranks * int(np.prod(self.points))
 
 
 def _slab_index(side: int, n: int) -> Tuple[slice, ...]:
@@ -196,6 +206,7 @@ def _emit_direct26(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
         region = _region_for(tuple(-x for x in d), cfg.points)
         q.enqueue_kernel(_make_unpack_fn(region, cfg.pack),
                          ["u", msg_in[d]], ["u"], name=f"unpack{i}")
+    _emit_damping(q, cfg)
 
 
 def _emit_staged3(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
@@ -226,11 +237,60 @@ def _emit_staged3(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
             region = _region_for(tuple(-x for x in d), cfg.points)
             q.enqueue_kernel(_make_unpack_fn(region, cfg.pack),
                              ["u", msg_in[d]], ["u"], name=f"unpack_s{stage}")
+    _emit_damping(q, cfg)
+
+
+def _emit_damping(q: STQueue, cfg: FacesConfig):
+    """End-of-iteration relaxation kernel (only when cfg.damping is on)."""
+    if cfg.damping:
+        scale = float(cfg.damping)
+        q.enqueue_kernel(lambda u: u * scale, ["u"], ["u"], name="damp")
 
 
 # --------------------------------------------------------------------------
 # persistent (device-resident) timed loop
 # --------------------------------------------------------------------------
+
+
+def global_residual_fn(cfg: FacesConfig, buf: str = "u"):
+    """Build a ``reduce_fn(mem) -> scalar`` computing the *global* RMS
+    norm of ``buf``: local sum of squares, ``lax.psum`` over the mesh
+    axes, normalized by the global point count.  Runs inside the
+    device-resident loop — the convergence residual with no host sync.
+    """
+    n_total = float(cfg.n_points)
+
+    def residual(mem):
+        local = jnp.sum(jnp.square(mem[buf].astype(jnp.float32)))
+        return jnp.sqrt(jax.lax.psum(local, AXES3) / n_total)
+
+    return residual
+
+
+def run_faces_until_converged(cfg: FacesConfig, mesh, u0, tol: float,
+                              max_iters: int, mode: str = "dataflow",
+                              double_buffer: Optional[bool] = None):
+    """Iterate Faces until the global residual drops below ``tol`` —
+    with the *device* deciding when to stop (ONE host dispatch).
+
+    The termination predicate ``residual >= tol`` and the residual
+    reduction both run inside the persistent engine's ``while_loop``;
+    the host sees nothing until the converged field, the residual trace
+    and the realized iteration count come back together.
+
+    Returns ``(mem, residuals, n_done, stats)``: final buffers, the
+    residual trace trimmed to the realized length, the realized
+    iteration count, and the engine stats (``stats.dispatches == 1``).
+    """
+    from .engine_persistent import PersistentEngine
+
+    prog = build_faces_program(cfg, mesh).persistent(
+        max_iters, until=lambda r: r >= tol)
+    eng = PersistentEngine(prog, mode=mode, double_buffer=double_buffer,
+                           reduce_fn=global_residual_fn(cfg))
+    mem, residuals, n_done = eng(eng.init_buffers({"u": u0}))
+    n_done = int(n_done)
+    return mem, np.asarray(residuals)[:n_done], n_done, eng.stats
 
 
 def run_faces_persistent(cfg: FacesConfig, mesh, u0, n_iters: int,
@@ -316,4 +376,6 @@ def faces_oracle(u: np.ndarray, cfg: FacesConfig) -> np.ndarray:
             shifted[tuple(dst)] = msg[tuple(src)]
         region = _region_for(tuple(-x for x in d), cfg.points)
         out[(slice(None),) * 3 + region] += shifted
+    if cfg.damping:
+        out *= np.asarray(cfg.damping, dtype=out.dtype)
     return out

@@ -71,6 +71,12 @@ class STProgram:
     # via :meth:`persistent`; engines other than PersistentEngine ignore
     # it (they run one pass per dispatch).
     n_iters: int = 1
+    # Optional device-resident termination predicate: ``until(reduction)
+    # -> bool`` evaluated on the per-iteration scalar reduction inside
+    # the loop; the loop keeps running while it returns True (bounded by
+    # ``n_iters``, which becomes the max_iters safety bound).  Set via
+    # ``persistent(n_iters, until=...)``.
+    until: Optional[Callable[[Any], Any]] = None
 
     @property
     def n_batches(self) -> int:
@@ -82,9 +88,10 @@ class STProgram:
 
     @property
     def is_persistent(self) -> bool:
-        return self.n_iters > 1
+        return self.n_iters > 1 or self.until is not None
 
-    def persistent(self, n_iters: int) -> "STProgram":
+    def persistent(self, n_iters: int,
+                   until: Optional[Callable[[Any], Any]] = None) -> "STProgram":
         """Mark the program for device-resident re-execution.
 
         Returns a copy whose ``n_iters`` requests that an engine keep the
@@ -92,13 +99,22 @@ class STProgram:
         ("a queue may be reused across iterations") delivered without a
         host round-trip per iteration.
 
+        With ``until`` set the iteration count becomes *dynamic*: the
+        engine re-runs the program while ``until(reduction)`` stays True
+        (e.g. ``lambda residual: residual >= tol``), with ``n_iters`` as
+        the max-iteration safety bound.  The predicate runs inside the
+        device loop, on the per-iteration scalar reduction — zero host
+        syncs until converged.
+
         Reuse guards: re-execution is only well-defined when the queue is
         *quiescent* at the end of a pass — a ``wait`` must follow the
         final ``start`` so every triggered completion is observed before
         the next pass begins (the completion counter is cumulative, so
         one trailing wait covers all earlier batches; without it,
         iteration i+1's triggers could fire against iteration i's
-        in-flight completions).
+        in-flight completions).  A predicate-terminated loop may always
+        run more than one pass, so ``until`` triggers the guard even
+        when the bound is 1.
         """
         if n_iters < 1:
             raise QueueError(f"persistent n_iters must be >= 1, got {n_iters}")
@@ -108,13 +124,14 @@ class STProgram:
                 last_start = i
             elif isinstance(d, WaitDesc):
                 last_wait = i
-        if n_iters > 1 and last_start >= 0 and last_wait < last_start:
+        if ((n_iters > 1 or until is not None)
+                and last_start >= 0 and last_wait < last_start):
             raise QueueError(
                 "persistent reuse of a non-quiescent queue: the final "
                 "enqueue_start has no following enqueue_wait; counters "
                 "would not agree across iterations"
             )
-        return dataclasses.replace(self, n_iters=n_iters)
+        return dataclasses.replace(self, n_iters=n_iters, until=until)
 
     def dispatch_count_host(self) -> int:
         """How many separate device dispatches the host-orchestrated
@@ -251,7 +268,11 @@ class STQueue:
     def build(self, name: Optional[str] = None) -> STProgram:
         """Trace-time matching + validation → immutable STProgram."""
         self._check_live()
-        if self._built is not None:
+        resolved = name or self.name
+        # the cache is keyed on the resolved program name: a second
+        # build("other") must not hand back the program built under the
+        # first name
+        if self._built is not None and self._built.name == resolved:
             return self._built
         validate_program_order(self._descs)
 
@@ -282,15 +303,19 @@ class STQueue:
                 pending_sends, pending_recvs, pending_colls = [], [], []
                 kernels_since_start = []
             elif isinstance(d, WaitDesc):
-                if d.batch < len(batches):
-                    batches[d.batch].waited = True
+                # completion counters are cumulative (see
+                # STProgram.persistent): a wait on batch k observes the
+                # completions of every batch <= k, so all of them are
+                # quiescent after it — not just batch k itself.
+                for b in batches[: d.batch + 1]:
+                    b.waited = True
 
         self._built = STProgram(
             buffers=dict(self._buffers),
             descriptors=tuple(self._descs),
             batches=tuple(batches),
             mesh=self.mesh,
-            name=name or self.name,
+            name=resolved,
         )
         return self._built
 

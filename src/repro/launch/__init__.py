@@ -7,10 +7,11 @@ from .steps import (
     build_prefill_step,
     build_serve_step,
     build_train_step,
+    loss_plateau,
     persistent_steps,
 )
 
 __all__ = ["make_production_mesh", "make_host_mesh", "StepBundle",
            "build_bundle", "build_train_step", "build_prefill_step",
            "build_serve_step", "build_persistent_train_step",
-           "persistent_steps"]
+           "persistent_steps", "loss_plateau"]

@@ -233,50 +233,144 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                       in_sh, out_sh, input_sds)
 
 
-def persistent_steps(bundle: StepBundle, n_iters: int) -> StepBundle:
-    """Device-resident multi-step bundle: ONE host dispatch for
+def loss_plateau(eps: float = 1e-4, key: str = "loss"):
+    """Build an ``until(metrics, i) -> bool`` continue-predicate for
+    :func:`persistent_steps`: keep stepping while the last two realized
+    values of ``metrics[key]`` differ by more than ``eps`` (the first
+    two steps always run — there is nothing to compare before them)."""
+
+    def cond(metrics, i):
+        trace = metrics[key]
+        still_moving = jnp.abs(trace[i - 1] - trace[i - 2]) > eps
+        return jnp.logical_or(i < 2, still_moving)
+
+    return cond
+
+
+def persistent_steps(bundle: StepBundle, n_iters: int, *,
+                     until=None, stacked: Optional[bool] = None) -> StepBundle:
+    """Device-resident multi-step bundle: ONE host dispatch for up to
     ``n_iters`` train steps.
 
     The training-loop analogue of
     :mod:`repro.core.engine_persistent`: the returned bundle's
-    ``step_fn`` wraps the original step in an on-device
-    ``jax.lax.fori_loop``, so params/optimizer state round-trip through
-    device memory — never the host — between inner steps.  The same
-    batch feeds every inner step (the synthetic-data regime the
-    dry-run/benchmarks use); metrics are the last step's.  Shardings and
-    input stand-ins are unchanged — the loop carries exactly the
-    step's (params, opt_state, metrics) signature.
+    ``step_fn`` wraps the original step in an on-device loop, so
+    params/optimizer state round-trip through device memory — never the
+    host — between inner steps.
+
+    Data: the batch may carry a leading ``n_iters`` axis (one slice per
+    inner step, indexed on-device), or keep the per-step shape, in which
+    case the same batch feeds every inner step (the synthetic regime the
+    dry-run/benchmarks use).  ``stacked`` forces the interpretation;
+    by default it is inferred from the leaf shapes (against
+    ``bundle.input_sds`` when available).  Without ``input_sds`` the
+    inference is a heuristic — a per-step batch whose own leading dim
+    happens to equal ``n_iters`` is indistinguishable from a stacked
+    one, so such callers should pass ``stacked`` explicitly.
+
+    Metrics: a **stacked carry** — every entry gains a leading
+    ``n_iters`` axis holding the per-step trace (zero-padded past the
+    realized count), plus a scalar ``steps_done``.  Not last-step-only:
+    a multi-step dispatch loses no observability.
+
+    Termination: with ``until(metrics, i) -> bool`` set (see
+    :func:`loss_plateau`), the ``fori_loop`` becomes a
+    ``lax.while_loop`` that keeps stepping while the predicate holds —
+    ``metrics`` is the stacked carry, ``i`` the number of completed
+    steps — bounded by ``n_iters``.  Loss-plateau termination without a
+    host round-trip per step.
+
+    Shardings and input stand-ins are unchanged — stacked-batch callers
+    place their own leading-axis arrays (see
+    :func:`repro.launch.train.train`).
     """
     if n_iters < 1:
         raise ValueError(f"n_iters must be >= 1, got {n_iters}")
     inner = bundle.step_fn
 
+    def _is_stacked(batch) -> bool:
+        if stacked is not None:
+            return bool(stacked)
+        leaves = jax.tree.leaves(batch)
+        ref = bundle.input_sds[2] if len(bundle.input_sds) > 2 else None
+        ref_leaves = jax.tree.leaves(ref) if ref is not None else None
+        if ref_leaves and len(ref_leaves) == len(leaves):
+            if all(tuple(l.shape) == tuple(r.shape)
+                   for l, r in zip(leaves, ref_leaves)):
+                return False
+            if all(tuple(l.shape) == (n_iters, *r.shape)
+                   for l, r in zip(leaves, ref_leaves)):
+                return True
+            raise ValueError(
+                "batch shapes match neither the per-step spec nor the "
+                f"stacked (n_iters={n_iters}, ...) spec")
+        return bool(leaves) and all(
+            getattr(l, "ndim", 0) >= 1 and l.shape[0] == n_iters
+            for l in leaves)
+
     def persistent_step(params, opt_state, batch):
-        if n_iters == 1:
-            return inner(params, opt_state, batch)
+        is_stacked = _is_stacked(batch)
+
+        def batch_at(i):
+            if not is_stacked:
+                return batch  # broadcast: every inner step sees the same data
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(
+                    x, i, axis=0, keepdims=False), batch)
 
         # seed the metrics carry abstractly so the step traces ONCE (in
         # the loop body), not twice in the compiled program
-        met_sd = jax.eval_shape(inner, params, opt_state, batch)[2]
-        met0 = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), met_sd)
+        met_sd = jax.eval_shape(inner, params, opt_state, batch_at(0))[2]
+        met0 = jax.tree.map(
+            lambda sd: jnp.zeros((n_iters, *sd.shape), sd.dtype), met_sd)
 
-        def body(_, c):
-            p, o, _m = c
-            return inner(p, o, batch)
+        def record(mets, m, i):
+            return jax.tree.map(
+                lambda acc, v: jax.lax.dynamic_update_index_in_dim(
+                    acc, jnp.asarray(v, acc.dtype), i, axis=0), mets, m)
 
-        return jax.lax.fori_loop(0, n_iters, body,
-                                 (params, opt_state, met0))
+        if until is None:
+            def body(i, c):
+                p, o, mets = c
+                p, o, m = inner(p, o, batch_at(i))
+                return p, o, record(mets, m, i)
+
+            params, opt_state, mets = jax.lax.fori_loop(
+                0, n_iters, body, (params, opt_state, met0))
+            steps_done = jnp.asarray(n_iters, jnp.int32)
+        else:
+            def wcond(carry):
+                i, keep_going, *_ = carry
+                return jnp.logical_and(keep_going, i < n_iters)
+
+            def wbody(carry):
+                i, _, p, o, mets = carry
+                p, o, m = inner(p, o, batch_at(i))
+                mets = record(mets, m, i)
+                i = i + 1
+                keep_going = jnp.asarray(until(mets, i), jnp.bool_).reshape(())
+                return i, keep_going, p, o, mets
+
+            carry0 = (jnp.zeros((), jnp.int32), jnp.asarray(True),
+                      params, opt_state, met0)
+            steps_done, _, params, opt_state, mets = jax.lax.while_loop(
+                wcond, wbody, carry0)
+
+        mets = dict(mets)
+        mets["steps_done"] = steps_done
+        return params, opt_state, mets
 
     return dataclasses.replace(bundle, step_fn=persistent_step)
 
 
 def build_persistent_train_step(cfg: ModelConfig, shape: ShapeConfig,
                                 mesh: Mesh, n_iters: int,
+                                until=None, stacked: Optional[bool] = None,
                                 **kwargs) -> StepBundle:
-    """:func:`build_train_step`, then fold ``n_iters`` steps into one
-    dispatch via :func:`persistent_steps`."""
+    """:func:`build_train_step`, then fold up to ``n_iters`` steps into
+    one dispatch via :func:`persistent_steps`."""
     return persistent_steps(build_train_step(cfg, shape, mesh, **kwargs),
-                            n_iters)
+                            n_iters, until=until, stacked=stacked)
 
 
 def build_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

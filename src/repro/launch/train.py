@@ -4,6 +4,23 @@ Runs real steps on the host mesh (CPU here; the same code path drives a
 TPU slice — only the mesh differs).  Used by ``examples/train_tiny.py``
 (≈100M params, a few hundred steps) and by integration tests.
 
+Dispatch regimes (``inner_steps``):
+
+* ``inner_steps=1`` — classic loop, one host dispatch per step;
+* ``inner_steps=N`` — :func:`repro.launch.steps.persistent_steps`
+  folds N steps into ONE dispatch: the host stacks N batches (leading
+  step axis, indexed on-device), the device loop carries
+  params/optimizer state, and a stacked metrics carry brings every
+  inner step's metrics back (the single host sync per dispatch reads
+  the realized step count);
+* ``plateau_eps`` — with ``inner_steps>1``, the device loop stops early
+  once the loss trace plateaus (``|Δloss| <= eps``): loss-plateau
+  termination with no host round-trip per step.
+
+Checkpoints hold ``{"params", "opt_state"}`` so a resumed run keeps its
+AdamW moments and its LR-schedule position; shardings are re-applied on
+restore from the live (device-placed) state trees.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \\
       --smoke --steps 50 --batch 8 --seq 128
@@ -12,21 +29,37 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import os
 import time
 from typing import Optional
 
 import jax
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import latest_step, restore_pytree, save_pytree
 from repro.configs.base import ModelConfig, ShapeConfig, get_config
 from repro.data.synthetic import SyntheticConfig, SyntheticTokens
-from repro.launch.steps import build_train_step
+from repro.launch.steps import build_train_step, loss_plateau, persistent_steps
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init
+
+
+def _restore_state(directory: str, step: int, params, opt_state):
+    """Restore params AND optimizer state from a checkpoint.
+
+    The ``like`` trees are the live, device-placed state, so
+    ``restore_pytree`` re-applies their shardings leaf by leaf.  Legacy
+    params-only checkpoints restore what they have (with a warning —
+    AdamW moments and the LR schedule restart in that case).
+    """
+    like = {"params": params, "opt_state": opt_state}
+    try:
+        restored = restore_pytree(directory, step, like)
+        return restored["params"], restored["opt_state"]
+    except KeyError:
+        print(f"warning: checkpoint step_{step} predates optimizer-state "
+              "checkpointing; resuming params only", flush=True)
+        return restore_pytree(directory, step, params), opt_state
 
 
 def train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
@@ -34,42 +67,84 @@ def train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
           checkpoint_dir: Optional[str] = None,
           checkpoint_every: int = 0,
           log_every: int = 10,
-          seed: int = 0):
+          seed: int = 0,
+          inner_steps: int = 1,
+          plateau_eps: Optional[float] = None):
+    if inner_steps < 1:
+        raise ValueError(f"inner_steps must be >= 1, got {inner_steps}")
+    if plateau_eps is not None and inner_steps < 2:
+        raise ValueError(
+            "plateau_eps needs inner_steps >= 2: a 1-step device loop is "
+            "bounded before the plateau predicate can ever stop it")
     opt = opt or AdamWConfig(lr=1e-3)
     bundle = build_train_step(cfg, shape, mesh, opt=opt, total_steps=steps)
     model = bundle.model
+    until = loss_plateau(plateau_eps) if plateau_eps is not None else None
 
     with mesh:
-        jitted = jax.jit(bundle.step_fn, in_shardings=bundle.in_shardings,
-                         out_shardings=bundle.out_shardings,
-                         donate_argnums=(0, 1))
+        param_sh, opt_sh, batch_sh = bundle.in_shardings
+        # stacked batches carry a leading (replicated) step axis
+        stacked_batch_sh = {
+            k: NamedSharding(mesh, P(None, *sh.spec)) for k, sh in batch_sh.items()
+        }
+        jit_cache = {}
+
+        def jitted_for(k: int):
+            if k not in jit_cache:
+                wrapped = persistent_steps(bundle, k, until=until, stacked=True)
+                jit_cache[k] = jax.jit(
+                    wrapped.step_fn,
+                    in_shardings=(param_sh, opt_sh, stacked_batch_sh),
+                    out_shardings=(param_sh, opt_sh, None),
+                    donate_argnums=(0, 1))
+            return jit_cache[k]
+
         params, _ = model.init(jax.random.PRNGKey(seed))
-        params = jax.device_put(params, bundle.in_shardings[0])
+        params = jax.device_put(params, param_sh)
         opt_state = adamw_init(params, opt)
-        opt_state = jax.device_put(opt_state, bundle.in_shardings[1])
+        opt_state = jax.device_put(opt_state, opt_sh)
 
         start = 0
         if checkpoint_dir and (ck := latest_step(checkpoint_dir)) is not None:
-            params = restore_pytree(checkpoint_dir, ck, params)
+            params, opt_state = _restore_state(checkpoint_dir, ck,
+                                               params, opt_state)
             start = ck
 
         source = SyntheticTokens(cfg, shape, SyntheticConfig(seed=seed))
         history = []
         t0 = time.time()
-        for step in range(start, steps):
-            batch = source.device_batch(step, bundle.in_shardings[2])
-            params, opt_state, metrics = jitted(params, opt_state, batch)
-            if step % log_every == 0 or step == steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
-                m["step"] = step
-                m["wall_s"] = round(time.time() - t0, 2)
-                history.append(m)
-                print(f"step {step:5d} loss={m['loss']:.4f} "
-                      f"ce={m.get('ce', 0):.4f} gnorm={m['grad_norm']:.3f} "
-                      f"lr={m['lr']:.2e} t={m['wall_s']}s", flush=True)
+        step = start
+        while step < steps:
+            k = min(inner_steps, steps - step)
+            host = [source.batch(step + j) for j in range(k)]
+            batch = {
+                key: jax.device_put(np.stack([h[key] for h in host]),
+                                    stacked_batch_sh[key])
+                for key in host[0]
+            }
+            params, opt_state, metrics = jitted_for(k)(params, opt_state, batch)
+            # the one host sync per dispatch: how far did the device get?
+            done = int(metrics["steps_done"])
+            for j in range(done):
+                gstep = step + j
+                if gstep % log_every == 0 or gstep == steps - 1:
+                    m = {key: float(np.asarray(v)[j])
+                         for key, v in metrics.items() if key != "steps_done"}
+                    m["step"] = gstep
+                    m["wall_s"] = round(time.time() - t0, 2)
+                    history.append(m)
+                    print(f"step {gstep:5d} loss={m['loss']:.4f} "
+                          f"ce={m.get('ce', 0):.4f} gnorm={m['grad_norm']:.3f} "
+                          f"lr={m['lr']:.2e} t={m['wall_s']}s", flush=True)
+            prev, step = step, step + done
             if (checkpoint_dir and checkpoint_every
-                    and (step + 1) % checkpoint_every == 0):
-                save_pytree(checkpoint_dir, step + 1, params)
+                    and step // checkpoint_every > prev // checkpoint_every):
+                save_pytree(checkpoint_dir, step,
+                            {"params": params, "opt_state": opt_state})
+            if done < k:
+                print(f"loss plateaued after {step} steps "
+                      f"(eps={plateau_eps:g}); stopping", flush=True)
+                break
         jax.block_until_ready(params)
     return params, opt_state, history
 
@@ -86,6 +161,11 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--inner-steps", type=int, default=1,
+                    help="train steps folded into one device dispatch")
+    ap.add_argument("--plateau-eps", type=float, default=None,
+                    help="stop a dispatch early when |dloss| <= eps "
+                         "(device-resident; needs --inner-steps > 1)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -105,7 +185,9 @@ def main():
     train(cfg, shape, mesh, steps=args.steps,
           opt=AdamWConfig(lr=args.lr),
           checkpoint_dir=args.checkpoint_dir,
-          checkpoint_every=args.checkpoint_every)
+          checkpoint_every=args.checkpoint_every,
+          inner_steps=args.inner_steps,
+          plateau_eps=args.plateau_eps)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,144 @@
+"""Device-resident convergence loops — the "zero host syncs until
+converged" acceptance tests.
+
+Fast lane: single-device (1,1,1 periodic) Faces with damping so the
+iteration is a contraction; :func:`run_faces_until_converged` must reach
+the tolerance in ONE host dispatch and match the NumPy oracle iterated
+to the same realized count.  Slow lane: the same contract on a real
+2×2×2 8-device grid.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacesConfig,
+    PersistentEngine,
+    build_faces_program,
+    faces_oracle,
+    global_residual_fn,
+    run_faces_until_converged,
+)
+from repro.core.halo import AXES3
+
+
+def _mesh111():
+    from repro.parallel import make_mesh
+    return make_mesh((1, 1, 1), AXES3)
+
+
+def _u0(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randn(*cfg.grid, *cfg.points).astype(np.float32)
+
+
+def _oracle_n(u0, cfg, n):
+    ref = np.asarray(u0)
+    for _ in range(n):
+        ref = faces_oracle(ref, cfg)
+    return ref
+
+
+CFG = FacesConfig(grid=(1, 1, 1), points=(4, 3, 5), periodic=True,
+                  damping=0.08)
+
+
+def test_converges_in_one_dispatch_and_matches_oracle():
+    """Acceptance: tolerance reached, exactly ONE host dispatch
+    (HostStats), field == oracle at the realized iteration count."""
+    tol, max_iters = 1e-2, 50
+    u0 = _u0(CFG)
+    mem, res, n_done, stats = run_faces_until_converged(
+        CFG, _mesh111(), u0, tol=tol, max_iters=max_iters)
+
+    assert stats.dispatches == 1          # the device owned the loop
+    assert stats.sync_points == 0         # no host polling inside it
+    assert 1 <= n_done < max_iters        # genuinely early-terminated
+    assert res.shape == (n_done,)
+    assert res[-1] < tol                  # converged...
+    assert np.all(res[:-1] >= tol)        # ...exactly when the trace says
+
+    ref = _oracle_n(u0, CFG, n_done)
+    np.testing.assert_allclose(np.asarray(mem["u"]), ref,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("double_buffer", [True, False])
+def test_dynamic_last_parity_slot_selection(double_buffer):
+    """The final-slot choice must follow the *realized* parity.  With
+    tolerances picked so realized counts are odd and even, the converged
+    field (and the message slots, when double-buffered) must agree with
+    the non-double-buffered run either way."""
+    u0 = _u0(CFG, seed=4)
+    for tol in (2e-2, 1e-2, 5e-3, 2e-3):
+        mem, res, n_done, _ = run_faces_until_converged(
+            CFG, _mesh111(), u0, tol=tol, max_iters=50,
+            double_buffer=double_buffer)
+        ref = _oracle_n(u0, CFG, n_done)
+        np.testing.assert_allclose(
+            np.asarray(mem["u"]), ref, rtol=1e-4, atol=1e-5,
+            err_msg=f"tol={tol} n_done={n_done} (parity {n_done % 2})")
+
+
+def test_max_iters_bound_respected():
+    """An unreachable tolerance stops at the safety bound."""
+    u0 = _u0(CFG)
+    mem, res, n_done, stats = run_faces_until_converged(
+        CFG, _mesh111(), u0, tol=0.0, max_iters=7)
+    assert n_done == 7 and res.shape == (7,)
+    assert stats.dispatches == 1
+    np.testing.assert_allclose(np.asarray(mem["u"]), _oracle_n(u0, CFG, 7),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_reduction_trace_matches_host_recomputation():
+    """The on-device residual trace equals residuals recomputed on the
+    host from oracle iterates."""
+    u0 = _u0(CFG, seed=9)
+    _, res, n_done, _ = run_faces_until_converged(
+        CFG, _mesh111(), u0, tol=1e-2, max_iters=50)
+    ref = np.asarray(u0)
+    want = []
+    for _ in range(n_done):
+        ref = faces_oracle(ref, CFG)
+        want.append(np.sqrt((ref.astype(np.float64) ** 2).mean()))
+    np.testing.assert_allclose(res, want, rtol=1e-4)
+
+
+def test_growing_residual_runs_to_bound_in_stream_mode():
+    """Without damping the Faces update grows, so `residual >= tol`
+    never breaks — stream mode hits the bound too (mode coverage for
+    the while_loop path)."""
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+    prog = build_faces_program(cfg, _mesh111()).persistent(
+        4, until=lambda r: r >= 1e-6)
+    eng = PersistentEngine(prog, mode="stream",
+                           reduce_fn=global_residual_fn(cfg))
+    mem, res, n_done = eng(eng.init_buffers({"u": _u0(cfg)}))
+    assert int(n_done) == 4
+    assert eng.stats.dispatches == 1
+
+
+@pytest.mark.slow
+def test_until_converged_8dev(subproc):
+    """The acceptance contract on a real 2×2×2 8-device grid."""
+    r = subproc("""
+import numpy as np
+from repro.core import FacesConfig, faces_oracle, run_faces_until_converged
+from repro.parallel import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("gx", "gy", "gz"))
+cfg = FacesConfig(grid=(2, 2, 2), points=(6, 6, 6), damping=0.12)
+u0 = np.random.RandomState(0).randn(2, 2, 2, 6, 6, 6).astype(np.float32)
+mem, res, n_done, stats = run_faces_until_converged(
+    cfg, mesh, u0, tol=1e-3, max_iters=40)
+assert stats.dispatches == 1 and stats.sync_points == 0
+assert 1 <= n_done < 40 and res[-1] < 1e-3 and np.all(res[:-1] >= 1e-3)
+ref = u0
+for _ in range(n_done):
+    ref = faces_oracle(ref, cfg)
+np.testing.assert_allclose(np.asarray(mem["u"]), ref, rtol=1e-4, atol=1e-5)
+print("converged 8dev OK", n_done)
+""")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "converged 8dev OK" in r.stdout

@@ -160,10 +160,15 @@ batch = {k: jax.numpy.asarray(v)
 with mesh:
     p, o = params, opt_state
     j1 = jax.jit(b1.step_fn)
+    losses = []
     for _ in range(3):
         p, o, met = j1(p, o, batch)
+        losses.append(float(met["loss"]))
     pN, oN, metN = jax.jit(bN.step_fn)(params, opt_state, batch)
-np.testing.assert_allclose(float(met["loss"]), float(metN["loss"]), rtol=1e-4)
+assert int(metN["steps_done"]) == 3
+# stacked metrics carry: the whole per-step loss trace comes back
+np.testing.assert_allclose(np.asarray(metN["loss"], np.float64), losses,
+                           rtol=1e-4)
 for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(pN)):
     np.testing.assert_allclose(np.asarray(a, np.float32),
                                np.asarray(b, np.float32),
@@ -174,21 +179,30 @@ print("persistent bundle ok")
     assert "persistent bundle ok" in r.stdout
 
 
-def test_persistent_steps_validates_and_wraps():
-    """Fast checks: n_iters guard + the fori_loop wrap itself, on a toy
-    StepBundle (no model compile) — N wrapped steps == N sequential."""
-    import jax
+def _toy_bundle():
     import jax.numpy as jnp
 
-    from repro.launch.steps import StepBundle, persistent_steps
+    from repro.launch.steps import StepBundle
 
     def toy_step(params, opt_state, batch):
         new_p = params + batch
         return new_p, opt_state + 1, {"loss": jnp.sum(new_p)}
 
-    bundle = StepBundle(cfg=None, shape=None, mesh=None, rules=None,
-                        model=None, step_fn=toy_step, in_shardings=None,
-                        out_shardings=None, input_sds=())
+    return StepBundle(cfg=None, shape=None, mesh=None, rules=None,
+                      model=None, step_fn=toy_step, in_shardings=None,
+                      out_shardings=None, input_sds=()), toy_step
+
+
+def test_persistent_steps_validates_and_wraps():
+    """Fast checks: n_iters guard + the fori_loop wrap itself, on a toy
+    StepBundle (no model compile) — N wrapped steps == N sequential,
+    with the full per-step metrics trace in the stacked carry."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import persistent_steps
+
+    bundle, toy_step = _toy_bundle()
 
     with pytest.raises(ValueError):
         persistent_steps(bundle, 0)
@@ -198,12 +212,155 @@ def test_persistent_steps_validates_and_wraps():
     p0, o0, b = jnp.zeros(4), jnp.int32(0), jnp.ones(4)
     pN, oN, met = jax.jit(wrapped.step_fn)(p0, o0, b)
     p, o = p0, o0
+    want_losses = []
     for _ in range(3):
         p, o, want = toy_step(p, o, b)
+        want_losses.append(float(want["loss"]))
     np.testing.assert_allclose(np.asarray(pN), np.asarray(p))
     assert int(oN) == int(o) == 3
-    np.testing.assert_allclose(float(met["loss"]), float(want["loss"]))
+    # stacked per-step metrics + realized count, not last-step-only
+    assert met["loss"].shape == (3,)
+    np.testing.assert_allclose(np.asarray(met["loss"]), want_losses)
+    assert int(met["steps_done"]) == 3
 
-    # n_iters=1 short-circuits without a loop
-    p1, o1, _ = persistent_steps(bundle, 1).step_fn(p0, o0, b)
+    p1, o1, met1 = persistent_steps(bundle, 1).step_fn(p0, o0, b)
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p0 + b))
+    assert met1["loss"].shape == (1,) and int(met1["steps_done"]) == 1
+
+
+def test_persistent_steps_indexes_stacked_batch():
+    """Regression: a stacked batch (leading n_iters axis) feeds one
+    slice per inner step — not the identical batch every step."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import persistent_steps
+
+    bundle, toy_step = _toy_bundle()
+    wrapped = persistent_steps(bundle, 3)
+    p0, o0 = jnp.zeros(4), jnp.int32(0)
+    stacked = jnp.stack([jnp.full(4, 1.0), jnp.full(4, 2.0),
+                         jnp.full(4, 3.0)])
+
+    pN, oN, met = jax.jit(wrapped.step_fn)(p0, o0, stacked)
+    p, o = p0, o0
+    want_losses = []
+    for j in range(3):
+        p, o, want = toy_step(p, o, stacked[j])
+        want_losses.append(float(want["loss"]))
+    np.testing.assert_allclose(np.asarray(pN), np.asarray(p))  # 1+2+3 = 6
+    np.testing.assert_allclose(np.asarray(met["loss"]), want_losses)
+
+    # explicit override forces the broadcast interpretation
+    forced = persistent_steps(bundle, 4, stacked=False)
+    pB, _, _ = jax.jit(forced.step_fn)(p0, o0, jnp.ones(4))
+    np.testing.assert_allclose(np.asarray(pB), 4.0)
+
+
+def test_persistent_steps_until_plateau():
+    """loss_plateau until= stops the device loop early and reports the
+    realized step count (metrics zero-padded past it)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import loss_plateau, persistent_steps
+
+    bundle, _ = _toy_bundle()
+    wrapped = persistent_steps(bundle, 6, until=loss_plateau(1e-6))
+    p0, o0 = jnp.zeros(4), jnp.int32(0)
+    # steps 1-2 move the loss; batches 3+ are zero -> plateau
+    stacked = jnp.stack([jnp.ones(4), jnp.ones(4)] + [jnp.zeros(4)] * 4)
+    pN, oN, met = jax.jit(wrapped.step_fn)(p0, o0, stacked)
+    done = int(met["steps_done"])
+    assert done == 3  # first flat delta observed after step 3
+    assert int(oN) == done
+    np.testing.assert_allclose(np.asarray(met["loss"]),
+                               [4.0, 8.0, 8.0, 0.0, 0.0, 0.0])
+
+    # an always-true predicate runs to the n_iters bound
+    full = persistent_steps(bundle, 4, until=lambda m, i: jnp.asarray(True),
+                            stacked=False)
+    _, oF, metF = jax.jit(full.step_fn)(p0, o0, jnp.ones(4))
+    assert int(metF["steps_done"]) == 4 and int(oF) == 4
+
+
+def test_train_rejects_plateau_without_inner_steps():
+    """plateau_eps can only fire inside a multi-step device loop; a
+    silent no-op config is rejected up front."""
+    from repro.configs.base import ModelConfig, ShapeConfig
+    from repro.launch.train import train
+    from repro.parallel import make_mesh
+
+    cfg = ModelConfig(name="tiny")
+    shape = ShapeConfig("t", 16, 2, "train")
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="inner_steps"):
+        train(cfg, shape, mesh, steps=2, plateau_eps=1e-4)
+    with pytest.raises(ValueError, match="inner_steps"):
+        train(cfg, shape, mesh, steps=2, inner_steps=0)
+
+
+def test_train_resume_restores_opt_state(tmp_path):
+    """Regression: an interrupted+resumed run must match an
+    uninterrupted one bit-for-bit — AdamW moments and the LR-schedule
+    position live in the checkpoint, not just params."""
+    import jax
+
+    from repro.configs.base import ModelConfig, ShapeConfig
+    from repro.launch.train import train
+    from repro.optim import AdamWConfig
+    from repro.parallel import make_mesh
+
+    cfg = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=64, remat="none",
+                      scan_layers=False)
+    shape = ShapeConfig("t", 16, 2, "train")
+    mesh = make_mesh((1,), ("data",))
+    opt = AdamWConfig(lr=1e-3)
+    da, db = str(tmp_path / "a"), str(tmp_path / "b")
+
+    pa, oa, _ = train(cfg, shape, mesh, steps=4, opt=opt, checkpoint_dir=da,
+                      checkpoint_every=2, log_every=100)
+    # interrupt at step 2, then resume to 4 from the checkpoint
+    train(cfg, shape, mesh, steps=2, opt=opt, checkpoint_dir=db,
+          checkpoint_every=2, log_every=100)
+    pb, ob, _ = train(cfg, shape, mesh, steps=4, opt=opt, checkpoint_dir=db,
+                      checkpoint_every=2, log_every=100)
+
+    assert int(oa["step"]) == int(ob["step"]) == 4  # schedule position kept
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(oa), jax.tree.leaves(ob)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_train_inner_steps_matches_per_step(subproc):
+    """train(inner_steps=N) — stacked real batches, one dispatch per N
+    steps — reproduces the per-step driver's loss trace and params."""
+    r = subproc("""
+import numpy as np, jax
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.train import train
+from repro.optim import AdamWConfig
+from repro.parallel import make_mesh
+
+cfg = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, remat="none",
+                  scan_layers=False)
+shape = ShapeConfig("t", 16, 2, "train")
+mesh = make_mesh((1,), ("data",))
+opt = AdamWConfig(lr=1e-3)
+p1, o1, h1 = train(cfg, shape, mesh, steps=6, opt=opt, log_every=1)
+pN, oN, hN = train(cfg, shape, mesh, steps=6, opt=opt, log_every=1,
+                   inner_steps=3)
+np.testing.assert_allclose([m["loss"] for m in h1],
+                           [m["loss"] for m in hN], rtol=1e-5)
+for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(pN)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-5, atol=1e-6)
+print("inner steps ok")
+""", devices=1)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "inner steps ok" in r.stdout

@@ -176,6 +176,94 @@ def test_reduction_may_read_slot_buffers():
     np.testing.assert_allclose(vals[True], vals[False], rtol=1e-5)
 
 
+# -- predicate-terminated loop (while_loop engine) ----------------------------
+
+
+@pytest.mark.parametrize("granularity", ["direct26", "staged3"])
+@pytest.mark.parametrize("double_buffer", [True, False])
+def test_while_loop_matches_fixed_engine(granularity, double_buffer):
+    """An always-true cond_fn for N iterations must reproduce the fixed
+    fori_loop engine exactly (carried-parity slots included)."""
+    import jax.numpy as jnp
+
+    from repro.core import global_residual_fn
+
+    n = 5
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 3, 5), periodic=True,
+                      granularity=granularity)
+    prog = build_faces_program(cfg, _mesh111()).persistent(n)
+    u0 = _u0(cfg, seed=2)
+
+    fixed = PersistentEngine(prog, mode="dataflow",
+                             double_buffer=double_buffer,
+                             reduce_fn=global_residual_fn(cfg))
+    out_f, red_f = fixed(fixed.init_buffers({"u": u0}))
+
+    looped = PersistentEngine(prog, mode="dataflow",
+                              double_buffer=double_buffer,
+                              reduce_fn=global_residual_fn(cfg),
+                              cond_fn=lambda r: jnp.asarray(True))
+    out_w, red_w, n_done = looped(looped.init_buffers({"u": u0}))
+
+    assert int(n_done) == n
+    assert looped.stats.dispatches == 1 and looped.stats.sync_points == 0
+    np.testing.assert_allclose(np.asarray(red_w), np.asarray(red_f),
+                               rtol=1e-6)
+    for k in out_f:
+        np.testing.assert_allclose(np.asarray(out_w[k]),
+                                   np.asarray(out_f[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_cond_fn_requires_reduce_fn():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+    prog = build_faces_program(cfg, _mesh111()).persistent(3)
+    with pytest.raises(ValueError, match="reduce_fn"):
+        PersistentEngine(prog, cond_fn=lambda r: r >= 0.1)
+    with pytest.raises(ValueError, match="max_iters"):
+        PersistentEngine(prog, max_iters=5)
+
+
+def test_until_metadata_roundtrip():
+    """STProgram.persistent(n, until=...) carries the predicate to the
+    engine; the bound becomes max_iters."""
+    from repro.core import global_residual_fn
+
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+    base = build_faces_program(cfg, _mesh111())
+    assert base.until is None and not base.is_persistent
+
+    pred = lambda r: r >= 1e-3  # noqa: E731
+    prog = base.persistent(7, until=pred)
+    assert prog.until is pred and prog.n_iters == 7
+    assert prog.is_persistent  # predicate loops count as persistent
+
+    eng = PersistentEngine(prog, reduce_fn=global_residual_fn(cfg))
+    assert eng.cond_fn is pred and eng.max_iters == 7
+    out = eng(eng.init_buffers({"u": _u0(cfg)}))
+    assert len(out) == 3  # (mem, reductions, n_done)
+    assert out[1].shape == (7,)
+    assert 1 <= int(out[2]) <= 7
+
+
+def test_until_triggers_quiescence_guard_even_at_bound_1():
+    """A predicate loop may always re-execute, so a non-quiescent queue
+    is rejected even when the safety bound is 1."""
+    from repro.core import OffsetPeer, STQueue
+    from repro.parallel import make_mesh
+
+    q = STQueue(make_mesh((1,), ("x",)), name="nq")
+    q.buffer("a", (4,), np.float32, pspec=("x",))
+    q.buffer("b", (4,), np.float32, pspec=("x",))
+    q.enqueue_send("a", OffsetPeer("x", 1, periodic=True), tag=0)
+    q.enqueue_recv("b", OffsetPeer("x", -1, periodic=True), tag=0)
+    q.enqueue_start()          # no enqueue_wait: non-quiescent
+    prog = q.build()
+    with pytest.raises(QueueError, match="quiescent"):
+        prog.persistent(1, until=lambda r: r >= 0.0)
+    assert prog.persistent(1).n_iters == 1  # fixed single pass still fine
+
+
 # -- queue-reuse guards & metadata -------------------------------------------
 
 

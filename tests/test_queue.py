@@ -91,6 +91,52 @@ class TestQueueAPI:
         q.enqueue_start()
         assert q.build() is q.build()
 
+    def test_build_name_not_served_from_stale_cache(self):
+        # regression: a second build("other") used to return the cached
+        # program built under the first name
+        q = _queue()
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=0)
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+        q.enqueue_start()
+        first = q.build("first")
+        assert first.name == "first"
+        other = q.build("other")
+        assert other.name == "other"
+        assert other.descriptors == first.descriptors
+        # same-name rebuilds still hit the cache; default name rebuilds too
+        assert q.build("other") is other
+        assert q.build().name == q.name
+        assert q.build() is q.build()
+
+    def test_wait_marks_all_earlier_batches_waited(self):
+        # regression: completion counters are cumulative, so ONE trailing
+        # wait quiesces every batch <= its own — earlier unwaited batches
+        # must not misreport quiescence
+        q = _queue()
+        for t in range(2):
+            q.enqueue_recv("b", OffsetPeer("x", -1), tag=t)
+            q.enqueue_send("a", OffsetPeer("x", 1), tag=t)
+            q.enqueue_start()
+        q.enqueue_wait()  # waits on batch 1; batch 0 completes before it
+        prog = q.build()
+        assert prog.n_batches == 2
+        assert all(b.waited for b in prog.batches)
+        assert prog.persistent(4).n_iters == 4  # quiescent: reuse allowed
+
+    def test_wait_does_not_cover_later_batches(self):
+        q = _queue()
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=0)
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+        q.enqueue_start()
+        q.enqueue_wait()
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=1)
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=1)
+        q.enqueue_start()  # never waited
+        prog = q.build()
+        assert prog.batches[0].waited and not prog.batches[1].waited
+        with pytest.raises(QueueError, match="quiescent"):
+            prog.persistent(2)
+
 
 class TestMatching:
     def test_offset_peers_match_by_inverse(self):

@@ -2,7 +2,9 @@
 non-blocking — the whole point is that the CPU only appends descriptors).
 
 Measures µs/call for enqueue_send/recv/start/wait, trace-time matching,
-and program build for batches of N descriptors.
+program build for batches of N descriptors, and multi-queue composition
+(``compose`` + building the programs being composed) — regressions on
+any enqueue-path stay visible here.
 """
 
 from __future__ import annotations
@@ -71,4 +73,40 @@ def run_all():
                         "derived": f"us_per_descriptor={dt/(2*n):.2f}"})
         print(f"  build+match n={n:5d} {dt:10.1f} us "
               f"({dt/(2*n):.2f} us/descriptor)")
+
+    # multi-queue composition cost (schedule layer, host-side only)
+    from repro.core import compose
+
+    def matched_program(name, n):
+        q = STQueue(mesh, name)
+        q.buffer("a", (64, 64), np.float32, pspec=("x",))
+        q.buffer("b", (64, 64), np.float32, pspec=("x",))
+        for i in range(n):
+            q.enqueue_recv("b", OffsetPeer("x", -1), tag=i)
+        for i in range(n):
+            q.enqueue_send("a", OffsetPeer("x", 1), tag=i)
+        q.enqueue_start()
+        q.enqueue_wait()
+        return q.build()
+
+    for n in (26, 260):
+        pa = matched_program("qa", n)
+        pb = matched_program("qb", n)
+        t_comp = _bench(lambda: compose(pa, pb), n=200)
+        RESULTS.append({"bench": "api_overhead",
+                        "variant": f"compose_2x{n}",
+                        "us_per_call": t_comp,
+                        "derived": f"us_per_descriptor={t_comp/(2*(2*n+2)):.2f}"})
+        print(f"  compose 2x n={n:4d} {t_comp:10.1f} us/call "
+              f"({t_comp/(2*(2*n+2)):.2f} us/descriptor)")
+
+        # composed end-to-end: build both programs + compose them
+        def build_and_compose(_n=n):
+            return compose(matched_program("qa", _n), matched_program("qb", _n))
+        t_bc = _bench(build_and_compose, n=50)
+        RESULTS.append({"bench": "api_overhead",
+                        "variant": f"composed_build_2x{n}",
+                        "us_per_call": t_bc,
+                        "derived": "build_both+compose"})
+        print(f"  composed-build 2x n={n:4d} {t_bc:10.1f} us/call")
     return RESULTS

@@ -22,6 +22,11 @@ figP   persistent iteration loop (beyond-paper; the "fully offloaded"
        (device-resident fori_loop) — the host-dispatch count for the
        whole N-iteration timed loop collapses from N×per-op and N×1
        down to exactly 1, measured via HostStats counters.
+fig_pipeline  multi-queue composition (beyond-paper; the multi-DWQ
+       schedule): two half-grid Faces queues run sequentially (two
+       persistent dispatches, no cross-queue overlap) vs composed via
+       ``repro.core.schedule.compose`` (ONE dispatch, round-robin
+       interleaved) — reports the overlap speedup and dispatch counts.
 
 Loop configuration mirrors the paper (§V-B): outer × middle × inner
 with buffer alloc in the outer loop; defaults are scaled down for CPU
@@ -55,7 +60,7 @@ def _time_engine(engine, mem, inner: int, repeats: int = 5):
         jax.block_until_ready(list(m.values()))
         times.append(time.perf_counter() - t0)
     return {"avg_s": float(np.mean(times)), "min_s": float(np.min(times)),
-            "max_s": float(np.max(times))}
+            "max_s": float(np.max(times)), "med_s": float(np.median(times))}
 
 
 def _setup(grid, points, **cfg_kw):
@@ -100,6 +105,8 @@ def _report(fig: str, variants: Dict, paper_claim: str):
         RESULTS.append({
             "bench": f"faces_{fig}", "variant": name,
             "us_per_call": r["avg_s"] * 1e6,
+            "median_ms": r["med_s"] * 1e3,
+            "dispatches": r["dispatches_per_iter"],
             "derived": f"rel_to_baseline={rel:.3f};"
                        f"dispatches={r['dispatches_per_iter']}",
         })
@@ -195,6 +202,8 @@ def fig_persistent(inner=None):
         RESULTS.append({
             "bench": "faces_figP", "variant": name,
             "us_per_call": r["avg_s"] * 1e6,
+            "median_ms": r["med_s"] * 1e3,
+            "dispatches": r["dispatches_per_loop"],
             "derived": f"rel_to_host={rel:.3f};"
                        f"dispatches_per_loop={r['dispatches_per_loop']}",
         })
@@ -278,8 +287,10 @@ def fig_convergence(tols=(1e-1, 1e-2, 1e-3), max_iters=None):
                  host_iters),
                 ("device_resident", dev_s, n_done, 1, 0)):
             RESULTS.append({
-                "bench": "faces_convergence", "variant": name,
+                "bench": "faces_convergence", "variant": f"{name}_tol{tol:g}",
                 "us_per_call": secs * 1e6,
+                "median_ms": secs * 1e3,
+                "dispatches": disp,
                 "derived": f"tol={tol:g};iters={iters};dispatches={disp};"
                            f"host_syncs={syncs}",
             })
@@ -289,10 +300,81 @@ def fig_convergence(tols=(1e-1, 1e-2, 1e-3), max_iters=None):
     return RESULTS
 
 
+def fig_pipeline(inner=None, repeats=5):
+    """Pipelined multi-queue: 2 composed half-grid queues, 1 dispatch,
+    vs the same two persistent programs dispatched sequentially (2)."""
+    import jax
+    from repro.core import (
+        FacesConfig, PersistentEngine, build_faces_program, compose,
+        half_config, split_halves,
+    )
+    from repro.parallel import make_mesh
+
+    inner = inner or _cfg_env("FACES_INNER", 10)
+    grid, points = (2, 2, 2), (12, 12, 12)
+    mesh = make_mesh(grid, ("gx", "gy", "gz"))
+    cfgh = half_config(FacesConfig(grid=grid, points=points))
+    rng = np.random.RandomState(0)
+    u0 = rng.randn(*grid, *points).astype(np.float32)
+    ua, ub = split_halves(u0)
+
+    progA = build_faces_program(cfgh, mesh, name="facesA").persistent(inner)
+    progB = build_faces_program(cfgh, mesh, name="facesB").persistent(inner)
+    engA = PersistentEngine(progA, mode="dataflow")
+    engB = PersistentEngine(progB, mode="dataflow")
+    memA = engA.init_buffers({"u": ua})
+    memB = engB.init_buffers({"u": ub})
+    engA(dict(memA)), engB(dict(memB))  # warm compiles
+
+    # sequential: two host dispatches per loop, no cross-queue overlap
+    engA.stats.reset(), engB.stats.reset()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        outA, outB = engA(dict(memA)), engB(dict(memB))
+        jax.block_until_ready([list(outA.values()), list(outB.values())])
+        times.append(time.perf_counter() - t0)
+    seq = {"avg_s": float(np.mean(times)), "med_s": float(np.median(times)),
+           "min_s": float(np.min(times))}
+    seq_disp = (engA.stats.dispatches + engB.stats.dispatches) // repeats
+
+    # composed: ONE dispatch, B's compute interleaves A's comm windows
+    sched = compose(progA, progB)
+    engC = PersistentEngine(sched, mode="dataflow")
+    memC = engC.init_buffers({"facesA/u": ua, "facesB/u": ub})
+    warm = engC(dict(memC))
+    # the composition must not perturb either queue's numerics
+    np.testing.assert_allclose(np.asarray(warm["facesA/u"]),
+                               np.asarray(outA["u"]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(warm["facesB/u"]),
+                               np.asarray(outB["u"]), rtol=1e-5, atol=1e-6)
+    engC.stats.reset()
+    comp = _time_engine(engC, memC, 1, repeats)
+    comp_disp = engC.stats.dispatches // repeats
+    assert (seq_disp, comp_disp) == (2, 1), (seq_disp, comp_disp)
+
+    speedup = seq["avg_s"] / comp["avg_s"] if comp["avg_s"] else float("nan")
+    for name, r, disp in (("sequential_2q", seq, seq_disp),
+                          ("composed_1q", comp, comp_disp)):
+        RESULTS.append({
+            "bench": "faces_pipeline", "variant": name,
+            "us_per_call": r["avg_s"] * 1e6,
+            "median_ms": r["med_s"] * 1e3,
+            "dispatches": disp,
+            "derived": f"dispatches_per_loop={disp};"
+                       f"overlap_speedup={speedup:.3f}",
+        })
+        print(f"  pipe   {name:14s} avg={r['avg_s']*1e3:9.2f}ms "
+              f"med={r['med_s']*1e3:9.2f}ms dispatch/loop={disp}")
+    print(f"  overlap speedup (sequential/composed): {speedup:.3f}x "
+          f"({inner} iterations, 2 half-grid queues)")
+    return {"sequential_2q": seq, "composed_1q": comp, "speedup": speedup}
+
+
 def run_all():
     print("Faces microbenchmark (paper §V; 8 host devices)")
     for fn in (fig8, fig9, fig10, fig11, fig12, fig_persistent,
-               fig_convergence):
+               fig_convergence, fig_pipeline):
         print(f"-- {fn.__name__}: {fn.__doc__.splitlines()[0]}")
         fn()
     return RESULTS

@@ -59,6 +59,23 @@ def main() -> None:
         json.dump(results, f, indent=1)
     print(f"\nwrote {out}")
 
+    # machine-readable Faces perf trajectory (variant -> median ms,
+    # dispatch counts), tracked across PRs at the repo root
+    faces = {
+        f"{r['bench']}/{r['variant']}": {
+            "median_ms": round(r["median_ms"], 4),
+            "dispatches": r["dispatches"],
+        }
+        for r in results
+        if r["bench"].startswith("faces") and "median_ms" in r
+    }
+    if faces:
+        fout = os.path.join(here, "..", "BENCH_faces.json")
+        with open(fout, "w") as f:
+            json.dump(faces, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {fout}")
+
 
 if __name__ == '__main__':
     main()

@@ -4,7 +4,12 @@ ONE host dispatch, vs the host engine's N × per-op dispatches.
 ``--converge`` additionally smokes the predicate-terminated loop: the
 device iterates a damped (contracting) Faces update until the global
 residual drops below tolerance — still one dispatch, with the realized
-iteration count and the residual trace read back afterwards."""
+iteration count and the residual trace read back afterwards.
+
+``--pipeline`` smokes the multi-queue schedule: two half-grid Faces
+queues composed (`repro.core.schedule.compose`) into ONE dispatch,
+fixed-count and per-program-predicate variants, checked against
+independent per-queue runs."""
 import argparse
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -15,13 +20,16 @@ import jax.numpy as jnp
 
 from repro.core import (
     FacesConfig, HostEngine, PersistentEngine, build_faces_program,
-    faces_oracle, run_faces_until_converged,
+    faces_oracle, half_config, run_faces_persistent, run_faces_pipelined,
+    run_faces_until_converged, split_halves,
 )
 from repro.core.halo import AXES3
 
 args = argparse.ArgumentParser()
 args.add_argument("--converge", action="store_true",
                   help="also smoke the until-converged while_loop path")
+args.add_argument("--pipeline", action="store_true",
+                  help="also smoke the composed 2-queue pipelined dispatch")
 args = args.parse_args()
 
 N = 5
@@ -79,5 +87,38 @@ if args.converge:
     np.testing.assert_allclose(np.asarray(mem["u"]), cref,
                                rtol=1e-4, atol=1e-5)
     print("CONVERGENCE SMOKE PASS")
+
+if args.pipeline:
+    # two half-grid queues composed: ONE dispatch, results matching the
+    # two independent persistent runs (2 dispatches)
+    pcfg = FacesConfig(grid=(2, 2, 2), points=(6, 4, 4), damping=0.12)
+    pu0 = rng.randn(2, 2, 2, 6, 4, 4).astype(np.float32)
+    pmem, pstats = run_faces_pipelined(pcfg, mesh, pu0, n_iters=N)
+    assert pstats.dispatches == 1 and pstats.sync_points == 0
+    cfgh = half_config(pcfg)
+    ind_disp = 0
+    for nm, uh in zip(("facesA", "facesB"), split_halves(pu0)):
+        ind, istats = run_faces_persistent(cfgh, mesh, uh, n_iters=N)
+        ind_disp += istats.dispatches
+        np.testing.assert_allclose(np.asarray(pmem[f"{nm}/u"]),
+                                   np.asarray(ind["u"]),
+                                   rtol=1e-6, atol=1e-7)
+    print(f"pipelined[fixed] OK composed_dispatches={pstats.dispatches} "
+          f"sequential_dispatches={ind_disp}")
+
+    # per-program predicates: each half converges to its OWN tolerance
+    tols = (1e-1, 1e-2)
+    pmem, reds, n_done, pstats = run_faces_pipelined(
+        pcfg, mesh, pu0, tols=tols, max_iters=40)
+    assert pstats.dispatches == 1
+    for nm, uh, tol in zip(("facesA", "facesB"), split_halves(pu0), tols):
+        im, ir, inn, _ = run_faces_until_converged(cfgh, mesh, uh, tol=tol,
+                                                   max_iters=40)
+        assert inn == n_done[nm], (nm, inn, n_done[nm])
+        np.testing.assert_allclose(np.asarray(pmem[f"{nm}/u"]),
+                                   np.asarray(im["u"]),
+                                   rtol=1e-6, atol=1e-7)
+    print(f"pipelined[until] OK n_done={n_done} dispatches=1")
+    print("PIPELINE SMOKE PASS")
 
 print("PERSISTENT SMOKE PASS")

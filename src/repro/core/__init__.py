@@ -10,6 +10,9 @@ The paper's contribution as a composable JAX module:
 * :mod:`.engine_host`  — baseline: host-orchestrated per-op dispatch
 * :mod:`.engine_persistent` — fully offloaded: N iterations, one dispatch,
   the device owns the loop (double-buffered slots, carried counters)
+* :mod:`.schedule`     — ``compose``/``STSchedule``: N concurrent queues
+  fused into one pipelined device-resident program (per-program counter
+  banks, round-robin batch interleaving, per-program predicates)
 * :mod:`.halo`         — the Faces 26-neighbor pattern as an ST program
 * :mod:`.overlap`      — decomposed overlap-friendly collectives
 """
@@ -47,14 +50,20 @@ from .halo import (
     build_faces_program,
     faces_oracle,
     global_residual_fn,
+    half_config,
+    merge_halves,
     run_faces_persistent,
+    run_faces_pipelined,
     run_faces_until_converged,
+    split_halves,
 )
 from .matching import Batch, Channel, MatchError, match_batch
 from .queue import QueueError, STProgram, STQueue, create_queue
+from .schedule import ScheduleError, STSchedule, SubProgram, compose
 
 __all__ = [
     "STQueue", "STProgram", "create_queue", "QueueError",
+    "STSchedule", "SubProgram", "compose", "ScheduleError",
     "FusedEngine", "HostEngine", "HostStats", "PersistentEngine",
     "OffsetPeer", "GridOffsetPeer", "PairListPeer",
     "SendDesc", "RecvDesc", "CollDesc", "KernelDesc", "StartDesc", "WaitDesc",
@@ -63,6 +72,7 @@ __all__ = [
     "gate", "completion_from",
     "FacesConfig", "build_faces_program", "faces_oracle",
     "run_faces_persistent", "run_faces_until_converged",
+    "run_faces_pipelined", "half_config", "split_halves", "merge_halves",
     "global_residual_fn",
     "DIRECTIONS", "FACES", "EDGES", "CORNERS",
 ]

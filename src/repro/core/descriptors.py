@@ -35,6 +35,15 @@ on every device, so a peer is expressed relationally:
 * ``PairListPeer(axis, pairs)`` — explicit (src, dst) rank pairs, the
   closest analogue of the paper's Fig. 7 two-rank example.  Legal
   because ST forbids wildcards: the global pattern is static.
+
+Program identity
+----------------
+Every descriptor carries a ``pid`` (program id, default 0).  A program
+built from a single :class:`~repro.core.queue.STQueue` uses pid 0
+throughout; :func:`repro.core.schedule.compose` assigns each fused
+sub-program its own pid so the engines can keep **per-program
+trigger/completion counter banks** — the multi-DWQ analogue of one
+counter pair per ``MPIX_Queue``.
 """
 
 from __future__ import annotations
@@ -151,6 +160,8 @@ class KernelDesc:
     reads: Tuple[str, ...]
     writes: Tuple[str, ...]
     name: str = "kernel"
+    # Program identity (multi-queue composition; see module docstring).
+    pid: int = 0
 
 
 @dataclasses.dataclass
@@ -162,6 +173,7 @@ class SendDesc:
     threshold: int = -1
     # Optional slice of the buffer to send: tuple of slice objects.
     region: Optional[Tuple[slice, ...]] = None
+    pid: int = 0
 
 
 @dataclasses.dataclass
@@ -174,6 +186,7 @@ class RecvDesc:
     # How to deposit into the destination buffer: "replace" or "add"
     # ("add" is the Faces gather-scatter sum deposit).
     mode: str = "replace"
+    pid: int = 0
 
 
 @dataclasses.dataclass
@@ -186,18 +199,21 @@ class CollDesc:
     axis: Any  # mesh axis name or tuple
     kwargs: dict = dataclasses.field(default_factory=dict)
     threshold: int = -1
+    pid: int = 0
 
 
 @dataclasses.dataclass
 class StartDesc:
     batch: int  # index of the batch this start triggers
     threshold: int = -1
+    pid: int = 0
 
 
 @dataclasses.dataclass
 class WaitDesc:
     batch: int
     expected: int = -1  # completion-counter target
+    pid: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -179,29 +179,46 @@ def _run_program(mem: Dict[str, jax.Array], *, prog: STProgram, mode: str,
     return mem
 
 
+def fresh_token_banks(prog: STProgram):
+    """One (trigger, completion) counter pair per program id — a single
+    entry for a plain program, one per sub-program for a composed
+    :class:`~repro.core.schedule.STSchedule` (each MPIX_Queue keeps its
+    own counters; composition must not merge them)."""
+    pids = tuple(prog.buffers_by_pid())
+    return ({pid: counters.fresh_token() for pid in pids},
+            {pid: counters.fresh_token() for pid in pids})
+
+
 def _interpret_program(
     mem: Dict[str, jax.Array],
     *,
     prog: STProgram,
     mode: str,
     mesh_shape: Dict[str, int],
-    token: Optional[jax.Array] = None,
-    comp_token: Optional[jax.Array] = None,
-) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    tokens: Optional[Dict[int, jax.Array]] = None,
+    comp_tokens: Optional[Dict[int, jax.Array]] = None,
+) -> Tuple[Dict[str, jax.Array], Dict[int, jax.Array], Dict[int, jax.Array]]:
     """Interpret one pass over ``prog``'s descriptors.
 
     Shared by :class:`FusedEngine` (one pass per host dispatch) and
     :class:`~repro.core.engine_persistent.PersistentEngine` (N passes
-    inside a device-resident loop).  ``token``/``comp_token`` are the
-    trigger and completion counters; passing the values returned by a
-    previous pass preserves MPIX_Queue-reuse semantics — the counters
-    keep advancing across iterations instead of restarting at zero.
+    inside a device-resident loop).  ``tokens``/``comp_tokens`` are the
+    trigger and completion counter *banks*, keyed by program id: a plain
+    program uses the single pid-0 pair; a composed schedule gets one
+    pair per sub-program, so each queue's FIFO/gating is scoped to its
+    own buffers and queues never serialize each other.  Passing the
+    banks returned by a previous pass preserves MPIX_Queue-reuse
+    semantics — the counters keep advancing across iterations instead
+    of restarting at zero.
     """
     mem = dict(mem)
-    if token is None:
-        token = counters.fresh_token()          # trigger counter
-    if comp_token is None:
-        comp_token = counters.fresh_token()     # completion counter
+    pid_bufs = prog.buffers_by_pid()
+    if tokens is None or comp_tokens is None:
+        fresh_trigs, fresh_comps = fresh_token_banks(prog)
+        tokens = fresh_trigs if tokens is None else tokens
+        comp_tokens = fresh_comps if comp_tokens is None else comp_tokens
+    tokens = dict(tokens)
+    comp_tokens = dict(comp_tokens)
     batches_by_index = {b.index: b for b in prog.batches}
     # buffers each batch received into (for dataflow-mode waits)
     recv_bufs_by_batch: Dict[int, List[str]] = {
@@ -214,11 +231,13 @@ def _interpret_program(
     }
 
     for d in prog.descriptors:
+        pid = d.pid
         if isinstance(d, KernelDesc):
             args = [mem[r] for r in d.reads]
             if mode == "stream":
                 # strict FIFO: kernel ordered after everything before it
-                token, args = counters.tie(token, *args)
+                # on its OWN program's stream (queues stay independent)
+                tokens[pid], args = counters.tie(tokens[pid], *args)
             outs = d.fn(*args)
             if not isinstance(outs, (tuple, list)):
                 outs = (outs,)
@@ -232,43 +251,50 @@ def _interpret_program(
                 axes = tuple(a for a in jax.tree.leaves(list(spec)) if a)
                 mem[w] = _ensure_vma(o.astype(prog.buffers[w].dtype), axes)
             if mode == "stream":
-                token = counters.completion_from(token, *[mem[w] for w in d.writes])
+                tokens[pid] = counters.completion_from(
+                    tokens[pid], *[mem[w] for w in d.writes])
 
         elif isinstance(d, StartDesc):
             batch = batches_by_index[d.batch]
-            # writeValue: bump after all earlier stream commands.
+            # writeValue: bump after all earlier commands of THIS
+            # program's stream.
             if mode == "stream":
-                token, _ = counters.tie(token, *list(mem.values()))
+                deps = [mem[b] for b in pid_bufs[pid]]
             else:
                 deps = [mem[b] for b in send_bufs_by_batch[d.batch]]
-                token, _ = counters.tie(token, *deps)
-            token = counters.bump(token)
+            tokens[pid], _ = counters.tie(tokens[pid], *deps)
+            tokens[pid] = counters.bump(tokens[pid])
             # fire every descriptor in the batch (threshold reached)
             results = []
             for ch in batch.channels:
-                mem, r = _run_channel(mem, ch, token, mesh_shape)
+                mem, r = _run_channel(mem, ch, tokens[pid], mesh_shape)
                 results.append(r)
             for coll in batch.colls:
-                mem, r = _run_collective(mem, coll, token, prog)
+                mem, r = _run_collective(mem, coll, tokens[pid], prog)
                 results.append(r)
-            comp_token = counters.completion_from(comp_token, *results)
+            comp_tokens[pid] = counters.completion_from(
+                comp_tokens[pid], *results)
 
         elif isinstance(d, WaitDesc):
-            # waitValue: gate the stream on the completion counter.
+            # waitValue: gate this program's stream on its completion
+            # counter (another program's descriptors flow right past).
             if mode == "stream":
-                names = list(mem.keys())
-                comp_token, vals = counters.gate(comp_token, *[mem[n] for n in names])
+                names = list(pid_bufs[pid])
+                comp_tokens[pid], vals = counters.gate(
+                    comp_tokens[pid], *[mem[n] for n in names])
                 mem.update(zip(names, vals))
-                token = counters.bump(token, 0) + 0 * comp_token  # stream advances
+                tokens[pid] = (counters.bump(tokens[pid], 0)
+                               + 0 * comp_tokens[pid])  # stream advances
             else:
                 names = recv_bufs_by_batch.get(d.batch, [])
                 if names:
-                    comp_token, vals = counters.gate(comp_token, *[mem[n] for n in names])
+                    comp_tokens[pid], vals = counters.gate(
+                        comp_tokens[pid], *[mem[n] for n in names])
                     mem.update(zip(names, vals))
         # Send/Recv/Coll descs themselves are no-ops here: they were
         # matched into their batch at build time (deferred execution).
 
-    return mem, token, comp_token
+    return mem, tokens, comp_tokens
 
 
 def _run_channel(mem, ch: Channel, token, mesh_shape):

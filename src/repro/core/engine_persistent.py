@@ -61,6 +61,27 @@ exactly the host-in-the-control-path cost the ST model removes.  With
   trace padded with zeros to ``max_iters`` plus the realized iteration
   count — still ONE host dispatch and zero host syncs until converged.
 
+Multi-queue schedules (``STSchedule``)
+--------------------------------------
+A composed :class:`~repro.core.schedule.STSchedule` (see
+:func:`repro.core.schedule.compose`) runs here too — N concurrent
+queues' persistent loops fused into ONE host dispatch.  The loop carry
+banks the trigger/completion counters *per program*, and per-program
+iteration counts / termination predicates are honored by a masked
+``while_loop``: each iteration interprets the whole interleaved
+program, then a per-program *active* flag decides whether that
+program's buffers (and slot copies) take the new values or stay frozen
+at the program's own termination point.  The loop runs until every
+program's predicate has terminated (bounded by the max per-program
+count), and ``__call__`` returns per-program reduction traces and
+realized iteration counts — the device-resident equivalent of N
+independent ``run_until_converged`` loops, in one dispatch, with each
+queue's communication overlapping the others' compute.  Per-program
+reductions are supplied as ``reduce_fns={sub_name: fn}``; each fn sees
+the full (namespaced) buffer dict but must only read its own program's
+buffers — a frozen program's buffers hold their converged values, but
+cross-program reads would still observe in-flight state.
+
 Dispatch accounting
 -------------------
 ``stats`` is a :class:`~repro.core.engine_host.HostStats`: one call =
@@ -82,10 +103,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 
-from . import counters
 from .descriptors import KernelDesc, StartDesc
-from .engine_fused import FusedEngine, _interpret_program
+from .engine_fused import FusedEngine, _interpret_program, fresh_token_banks
 from .queue import STProgram
+from .schedule import STSchedule
 
 
 def slot_buffers(prog: STProgram) -> Tuple[str, ...]:
@@ -175,6 +196,15 @@ class PersistentEngine(FusedEngine):
         Safety bound for ``cond_fn`` loops (defaults to
         ``n_iters`` / ``program.n_iters``).  Only meaningful with a
         predicate.
+    reduce_fns:
+        Multi-queue only: per-sub-program reductions for a composed
+        :class:`~repro.core.schedule.STSchedule`, keyed by sub-program
+        name.  Required for every sub with an ``until`` predicate;
+        optional for the rest (their traces are simply recorded).
+        ``__call__`` then returns ``(mem, reductions, n_done)`` where
+        ``reductions`` maps each reduced sub to its ``(max_iters,)``
+        trace (zero-padded past the sub's realized count) and ``n_done``
+        maps every sub to its realized iteration count.
     """
 
     def __init__(
@@ -186,28 +216,73 @@ class PersistentEngine(FusedEngine):
         reduce_fn: Optional[Callable[[Dict[str, jax.Array]], jax.Array]] = None,
         cond_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
         max_iters: Optional[int] = None,
+        reduce_fns: Optional[Dict[str, Callable]] = None,
         donate: bool = False,
     ):
         super().__init__(program, mode=mode, donate=donate)
-        self.cond_fn = cond_fn if cond_fn is not None else program.until
-        if max_iters is not None and self.cond_fn is None:
-            raise ValueError("max_iters is only meaningful with cond_fn/until")
-        if max_iters is None:
-            max_iters = program.n_iters if n_iters is None else n_iters
-        self.n_iters = self.max_iters = int(max_iters)
-        if self.n_iters < 1:
-            raise ValueError(f"n_iters must be >= 1, got {self.n_iters}")
-        if self.cond_fn is not None and reduce_fn is None:
-            raise ValueError(
-                "cond_fn requires reduce_fn: the termination predicate is "
-                "evaluated on the per-iteration scalar reduction")
-        # an explicit n_iters/cond_fn override must pass the same
-        # quiescence reuse-guard STProgram.persistent() enforces
-        # (raises QueueError)
-        program.persistent(self.n_iters, until=self.cond_fn)
+        self.reduce_fns: Dict[str, Callable] = dict(reduce_fns or {})
+
+        if isinstance(program, STSchedule):
+            # composed multi-queue schedule: iteration counts and
+            # predicates are per-program (set via .persistent on each
+            # program before compose); the global-loop knobs make no
+            # sense here.
+            for arg, nm in ((n_iters, "n_iters"), (reduce_fn, "reduce_fn"),
+                            (cond_fn, "cond_fn"), (max_iters, "max_iters")):
+                if arg is not None:
+                    raise ValueError(
+                        f"{nm} does not apply to a composed STSchedule: "
+                        "iteration counts/predicates are per-program "
+                        "(program.persistent(...) before compose) and "
+                        "reductions go through reduce_fns={name: fn}")
+            names = {s.name for s in program.subs}
+            for nm in self.reduce_fns:
+                if nm not in names:
+                    raise ValueError(
+                        f"reduce_fns names unknown sub-program {nm!r} "
+                        f"(have {sorted(names)})")
+            for s in program.subs:
+                if s.until is not None and s.name not in self.reduce_fns:
+                    raise ValueError(
+                        f"sub-program {s.name!r} has an until-predicate "
+                        f"but no reduce_fns[{s.name!r}] to evaluate it on")
+            self.cond_fn = None
+            self.reduce_fn = None
+            self.n_iters = self.max_iters = max(
+                s.n_iters for s in program.subs)
+            # the masked while path is needed whenever the subs diverge
+            # (different counts or any predicate) or traces are wanted
+            self._schedule_while = (
+                bool(self.reduce_fns)
+                or any(s.until is not None for s in program.subs)
+                or len({s.n_iters for s in program.subs}) > 1
+            )
+        else:
+            if self.reduce_fns:
+                raise ValueError(
+                    "reduce_fns is for composed STSchedules; a plain "
+                    "program takes the single reduce_fn")
+            self._schedule_while = False
+            self.cond_fn = cond_fn if cond_fn is not None else program.until
+            if max_iters is not None and self.cond_fn is None:
+                raise ValueError(
+                    "max_iters is only meaningful with cond_fn/until")
+            if max_iters is None:
+                max_iters = program.n_iters if n_iters is None else n_iters
+            self.n_iters = self.max_iters = int(max_iters)
+            if self.n_iters < 1:
+                raise ValueError(f"n_iters must be >= 1, got {self.n_iters}")
+            if self.cond_fn is not None and reduce_fn is None:
+                raise ValueError(
+                    "cond_fn requires reduce_fn: the termination predicate "
+                    "is evaluated on the per-iteration scalar reduction")
+            # an explicit n_iters/cond_fn override must pass the same
+            # quiescence reuse-guard STProgram.persistent() enforces
+            # (raises QueueError)
+            program.persistent(self.n_iters, until=self.cond_fn)
+            self.reduce_fn = reduce_fn
         self.double_buffer = (mode == "dataflow") if double_buffer is None \
             else bool(double_buffer)
-        self.reduce_fn = reduce_fn
         self._slots: Tuple[str, ...] = (
             slot_buffers(program) if self.double_buffer else ()
         )
@@ -221,7 +296,19 @@ class PersistentEngine(FusedEngine):
         prog = self.program
         specs = {n: P(*s.pspec) for n, s in prog.buffers.items()}
 
-        if self.cond_fn is not None:
+        if self._schedule_while:
+            out_specs = (specs,
+                         {nm: P() for nm in self.reduce_fns},
+                         {s.name: P() for s in prog.subs})
+            body = functools.partial(
+                _run_schedule_while,
+                sched=prog,
+                mode=self.mode,
+                mesh_shape=self._mesh_shape,
+                slots=self._slots,
+                reduce_fns=self.reduce_fns,
+            )
+        elif self.cond_fn is not None:
             out_specs = (specs, P(), P())
             body = functools.partial(
                 _run_persistent_while,
@@ -270,21 +357,20 @@ def _run_persistent(
     mem = dict(mem)
     # two copies of each message slot; iteration i uses copy i % 2
     slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
-    token = counters.fresh_token()
-    comp = counters.fresh_token()
+    tokens, comps = fresh_token_banks(prog)
     # None is an empty pytree node: no dead carry when reductions are off
     red = jnp.zeros((n_iters,), jnp.float32) if reduce_fn is not None else None
 
     def one_iter(i, carry):
-        mem, slot_mem, token, comp, red = carry
+        mem, slot_mem, tokens, comps, red = carry
         parity = jax.lax.rem(i, 2)
         cur = dict(mem)
         for n in slots:
             cur[n] = jax.lax.dynamic_index_in_dim(
                 slot_mem[n], parity, axis=0, keepdims=False)
-        cur, token, comp = _interpret_program(
+        cur, tokens, comps = _interpret_program(
             cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
-            token=token, comp_token=comp)
+            tokens=tokens, comp_tokens=comps)
         if reduce_fn is not None:  # sees every buffer, slots included
             val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
             red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
@@ -293,10 +379,10 @@ def _run_persistent(
                 slot_mem[n], cur.pop(n), parity, axis=0)
             for n in slots
         }
-        return cur, new_slots, token, comp, red
+        return cur, new_slots, tokens, comps, red
 
-    mem, slot_mem, token, comp, red = jax.lax.fori_loop(
-        0, n_iters, one_iter, (mem, slot_mem, token, comp, red),
+    mem, slot_mem, tokens, comps, red = jax.lax.fori_loop(
+        0, n_iters, one_iter, (mem, slot_mem, tokens, comps, red),
         unroll=unroll)
 
     # final values live in the slot the last iteration wrote
@@ -330,8 +416,7 @@ def _run_persistent_while(
     mem = dict(mem)
     # two copies of each message slot; iteration i uses copy i % 2
     slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
-    token = counters.fresh_token()
-    comp = counters.fresh_token()
+    tokens, comps = fresh_token_banks(prog)
     red = jnp.zeros((max_iters,), jnp.float32)
 
     def cond(carry):
@@ -339,15 +424,15 @@ def _run_persistent_while(
         return jnp.logical_and(keep_going, i < max_iters)
 
     def body(carry):
-        i, _, mem, slot_mem, token, comp, red = carry
+        i, _, mem, slot_mem, tokens, comps, red = carry
         parity = jax.lax.rem(i, 2)
         cur = dict(mem)
         for n in slots:
             cur[n] = jax.lax.dynamic_index_in_dim(
                 slot_mem[n], parity, axis=0, keepdims=False)
-        cur, token, comp = _interpret_program(
+        cur, tokens, comps = _interpret_program(
             cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
-            token=token, comp_token=comp)
+            tokens=tokens, comp_tokens=comps)
         val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
         red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
         new_slots = {
@@ -356,12 +441,12 @@ def _run_persistent_while(
             for n in slots
         }
         keep_going = jnp.asarray(cond_fn(val), jnp.bool_).reshape(())
-        return i + 1, keep_going, cur, new_slots, token, comp, red
+        return i + 1, keep_going, cur, new_slots, tokens, comps, red
 
     # the first iteration always runs: there is no reduction to test yet
     carry0 = (jnp.zeros((), jnp.int32), jnp.asarray(True),
-              mem, slot_mem, token, comp, red)
-    n_done, _, mem, slot_mem, token, comp, red = jax.lax.while_loop(
+              mem, slot_mem, tokens, comps, red)
+    n_done, _, mem, slot_mem, tokens, comps, red = jax.lax.while_loop(
         cond, body, carry0)
 
     # final values live in the slot the last *realized* iteration wrote —
@@ -371,3 +456,107 @@ def _run_persistent_while(
         mem[n] = jax.lax.dynamic_index_in_dim(
             slot_mem[n], last, axis=0, keepdims=False)
     return mem, red, n_done
+
+
+def _run_schedule_while(
+    mem: Dict[str, jax.Array],
+    *,
+    sched,
+    mode: str,
+    mesh_shape: Dict[str, int],
+    slots: Tuple[str, ...],
+    reduce_fns: Dict[str, Callable],
+):
+    """Multi-queue variant: every sub-program runs to its OWN iteration
+    count / predicate inside one ``while_loop``.
+
+    Each iteration interprets the whole interleaved schedule, then a
+    per-program ``active`` flag masks the result: an inactive (already
+    terminated) program's buffers, slot copies and reduction trace keep
+    their frozen values, so its final state is bit-identical to an
+    independent run of that program alone.  Because ``active`` flags
+    only ever go False once and stay False, a sub's local iteration
+    index equals the global one while it is active — the slot parity
+    and trace index need no per-program counters, only the final-slot
+    selection does (each sub's last write sits at parity
+    ``(n_done[sub] - 1) % 2``).
+    """
+    subs = sched.subs
+    max_iters = max(s.n_iters for s in subs)
+    name_of_pid = {s.pid: s.name for s in subs}
+    pid_of_buf = {b: s.pid for s in subs for b in s.buffers}
+
+    mem = dict(mem)
+    slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
+    tokens, comps = fresh_token_banks(sched)
+    reds = {nm: jnp.zeros((max_iters,), jnp.float32) for nm in reduce_fns}
+    active0 = {s.name: jnp.asarray(True) for s in subs}
+    ndone0 = {s.name: jnp.zeros((), jnp.int32) for s in subs}
+
+    def act_of(active, buf):
+        return active[name_of_pid[pid_of_buf[buf]]]
+
+    def cond(carry):
+        i, active, *_ = carry
+        any_active = functools.reduce(jnp.logical_or, active.values())
+        return jnp.logical_and(any_active, i < max_iters)
+
+    def body(carry):
+        i, active, ndone, mem, slot_mem, tokens, comps, reds = carry
+        parity = jax.lax.rem(i, 2)
+        cur = dict(mem)
+        for n in slots:
+            cur[n] = jax.lax.dynamic_index_in_dim(
+                slot_mem[n], parity, axis=0, keepdims=False)
+        new, tokens, comps = _interpret_program(
+            cur, prog=sched, mode=mode, mesh_shape=mesh_shape,
+            tokens=tokens, comp_tokens=comps)
+
+        # per-program reductions, realized counts and continue flags
+        ndone = dict(ndone)
+        reds = dict(reds)
+        keep = {}
+        for s in subs:
+            act = active[s.name]
+            val = None
+            if s.name in reduce_fns:
+                val = jnp.asarray(
+                    reduce_fns[s.name](new), jnp.float32).reshape(())
+                rec = jax.lax.dynamic_update_index_in_dim(
+                    reds[s.name], val, i, axis=0)
+                reds[s.name] = jnp.where(act, rec, reds[s.name])
+            done = ndone[s.name] + act.astype(jnp.int32)
+            ndone[s.name] = done
+            k = jnp.logical_and(act, done < s.n_iters)
+            if s.until is not None:
+                k = jnp.logical_and(
+                    k, jnp.asarray(s.until(val), jnp.bool_).reshape(()))
+            keep[s.name] = k
+
+        # masked state update: a terminated program's buffers freeze at
+        # its own convergence point (the interpreter still ran them this
+        # pass, but the results are discarded)
+        new_slots = {}
+        for n in slots:
+            val = jnp.where(act_of(active, n), new.pop(n),
+                            jax.lax.dynamic_index_in_dim(
+                                slot_mem[n], parity, axis=0, keepdims=False))
+            new_slots[n] = jax.lax.dynamic_update_index_in_dim(
+                slot_mem[n], val, parity, axis=0)
+        out_mem = {
+            n: jnp.where(act_of(active, n), new[n], mem[n]) for n in mem
+        }
+        return i + 1, keep, ndone, out_mem, new_slots, tokens, comps, reds
+
+    # the first iteration always runs for every program
+    carry0 = (jnp.zeros((), jnp.int32), active0, ndone0,
+              mem, slot_mem, tokens, comps, reds)
+    _, _, ndone, mem, slot_mem, tokens, comps, reds = jax.lax.while_loop(
+        cond, body, carry0)
+
+    # per-program final slot parity: each sub's last realized write
+    for n in slots:
+        last = jax.lax.rem(ndone[name_of_pid[pid_of_buf[n]]] - 1, 2)
+        mem[n] = jax.lax.dynamic_index_in_dim(
+            slot_mem[n], last, axis=0, keepdims=False)
+    return mem, reds, ndone

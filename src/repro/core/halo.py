@@ -29,7 +29,11 @@ For the *timed loop around* the inner exchange there are three control
 paths: per-op host dispatch (:mod:`.engine_host`), one dispatch per
 iteration (:mod:`.engine_fused`), and — via
 :func:`run_faces_persistent` / :mod:`.engine_persistent` — one dispatch
-for the whole N-iteration loop, device-resident.
+for the whole N-iteration loop, device-resident.  On top of that,
+:func:`run_faces_pipelined` splits the domain into two half-grids on
+the same mesh, gives each its own queue, and composes the two
+persistent loops (:mod:`.schedule`) so they interleave in ONE dispatch
+— each half may even terminate on its own convergence predicate.
 
 A pure-NumPy oracle (`faces_oracle`) computes the same update globally
 for correctness tests.
@@ -146,8 +150,14 @@ def _interior_fn(u):
     return smoothed[None, None, None]
 
 
-def build_faces_program(cfg: FacesConfig, mesh) -> STProgram:
-    """Build the Faces inner-loop as an ST program on a (gx,gy,gz) mesh."""
+def build_faces_program(cfg: FacesConfig, mesh,
+                        name: Optional[str] = None) -> STProgram:
+    """Build the Faces inner-loop as an ST program on a (gx,gy,gz) mesh.
+
+    ``name`` sets the program name (defaults to ``faces_{granularity}``)
+    — composed programs (:func:`repro.core.schedule.compose`) need
+    distinct names, since the name is the buffer namespace.
+    """
     gx, gy, gz = cfg.grid
     px, py, pz = cfg.points
     dtype = np.dtype(cfg.dtype)
@@ -170,7 +180,7 @@ def build_faces_program(cfg: FacesConfig, mesh) -> STProgram:
     else:
         raise ValueError(cfg.granularity)
 
-    return q.build(name=f"faces_{cfg.granularity}")
+    return q.build(name=name or f"faces_{cfg.granularity}")
 
 
 def _emit_direct26(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
@@ -316,6 +326,100 @@ def run_faces_persistent(cfg: FacesConfig, mesh, u0, n_iters: int,
                            double_buffer=double_buffer)
     out = eng(eng.init_buffers({"u": u0}))
     return out, eng.stats
+
+
+# --------------------------------------------------------------------------
+# pipelined multi-queue loop (two half-grids, one dispatch)
+# --------------------------------------------------------------------------
+
+
+def half_config(cfg: FacesConfig) -> FacesConfig:
+    """The per-half FacesConfig of an x-split domain (same device grid)."""
+    px, py, pz = cfg.points
+    if px % 2:
+        raise ValueError(f"points[0]={px} must be even to split the domain")
+    return dataclasses.replace(cfg, points=(px // 2, py, pz))
+
+
+def split_halves(u0):
+    """Split a (gx,gy,gz,px,py,pz) field into two x-halves."""
+    px = u0.shape[3]
+    if px % 2:
+        raise ValueError(f"points[0]={px} must be even to split the domain")
+    return u0[:, :, :, : px // 2], u0[:, :, :, px // 2:]
+
+
+def merge_halves(ua, ub):
+    """Inverse of :func:`split_halves`."""
+    return jnp.concatenate([jnp.asarray(ua), jnp.asarray(ub)], axis=3)
+
+
+PIPELINE_NAMES = ("facesA", "facesB")
+
+
+def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
+                        n_iters: Optional[int] = None,
+                        tols: Optional[Tuple[float, float]] = None,
+                        max_iters: Optional[int] = None,
+                        mode: str = "dataflow",
+                        double_buffer: Optional[bool] = None):
+    """Two half-grid Faces queues, composed, iterated in ONE dispatch.
+
+    The domain is split into two x-halves on the *same* mesh; each half
+    gets its own STQueue program, and
+    :func:`repro.core.schedule.compose` fuses them so half B's packs and
+    interior compute interleave with half A's trigger→wait window — the
+    pipelined multi-queue schedule, with the whole loop device-resident.
+
+    Two regimes:
+
+    * ``n_iters=N`` — both halves run exactly N iterations (uniform
+      fixed loop).  Returns ``(mem, stats)``; the halves live at
+      ``mem["facesA/u"]`` / ``mem["facesB/u"]`` (see
+      :func:`merge_halves`).
+    * ``tols=(tolA, tolB)`` + ``max_iters`` — each half runs until its
+      OWN global residual drops below its own tolerance (device-decided,
+      per-program predicates).  Returns
+      ``(mem, residuals, n_done, stats)`` with ``residuals[name]``
+      trimmed to the realized length and ``n_done[name]`` ints — the
+      bit-exact union of two independent
+      :func:`run_faces_until_converged` runs, still ONE dispatch.
+    """
+    from .engine_persistent import PersistentEngine
+    from .schedule import compose
+
+    if (n_iters is None) == (tols is None):
+        raise ValueError("pass exactly one of n_iters= or tols=")
+    cfgh = half_config(cfg)
+    ua, ub = split_halves(np.asarray(u0))
+    na, nb = PIPELINE_NAMES
+
+    if tols is None:
+        progs = [build_faces_program(cfgh, mesh, name=nm).persistent(n_iters)
+                 for nm in (na, nb)]
+        sched = compose(*progs)
+        eng = PersistentEngine(sched, mode=mode, double_buffer=double_buffer)
+        mem = eng(eng.init_buffers({f"{na}/u": ua, f"{nb}/u": ub}))
+        return mem, eng.stats
+
+    if max_iters is None:
+        raise ValueError("tols= requires max_iters=")
+    if len(tols) != 2:
+        raise ValueError(f"tols needs one tolerance per half, got {tols!r}")
+    progs = [
+        build_faces_program(cfgh, mesh, name=nm).persistent(
+            max_iters, until=lambda r, tol=tol: r >= tol)
+        for nm, tol in zip((na, nb), tols)
+    ]
+    sched = compose(*progs)
+    eng = PersistentEngine(
+        sched, mode=mode, double_buffer=double_buffer,
+        reduce_fns={nm: global_residual_fn(cfgh, buf=f"{nm}/u")
+                    for nm in (na, nb)})
+    mem, reds, n_done = eng(eng.init_buffers({f"{na}/u": ua, f"{nb}/u": ub}))
+    n_done = {nm: int(v) for nm, v in n_done.items()}
+    reds = {nm: np.asarray(r)[: n_done[nm]] for nm, r in reds.items()}
+    return mem, reds, n_done, eng.stats
 
 
 # --------------------------------------------------------------------------

@@ -139,6 +139,10 @@ class Batch:
     channels: List[Channel]
     colls: List[CollDesc]
     waited: bool = False
+    # Program identity under composition (see repro.core.schedule):
+    # batches keep their owning program's pid so engines can bank
+    # counters per program.
+    pid: int = 0
 
 
 def validate_program_order(descs: Sequence[Any]) -> None:

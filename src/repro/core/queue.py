@@ -13,6 +13,9 @@ MPIX_Enqueue_start      ``queue.enqueue_start()``
 MPIX_Enqueue_wait       ``queue.enqueue_wait()``
 (kernel launch)         ``queue.enqueue_kernel(fn, reads, writes)``
 (extension)             ``queue.enqueue_collective(op, buf, out, axis)``
+(multi-queue)           ``compose(progA, progB, ...)`` /
+                        ``prog.concurrent_with(...)`` → :class:`STSchedule`
+                        (:mod:`.schedule` — N queues, one device program)
 =====================   =====================================================
 
 All enqueue operations are **non-blocking descriptor appends** — nothing
@@ -33,7 +36,14 @@ Semantics preserved from the paper:
   ``STProgram.persistent(n_iters)`` promotes that reuse to a device-
   resident loop (one host dispatch for all iterations — see
   :mod:`.engine_persistent`); it requires the queue to be *quiescent*
-  per pass (every started batch waited), which ``persistent`` enforces.
+  per pass (every started batch waited), which ``persistent`` enforces;
+* several *independent* queues may be in flight concurrently: build one
+  program per queue and fuse them with :func:`repro.core.schedule.compose`
+  (or ``progA.concurrent_with(progB)``).  The composed
+  :class:`~repro.core.schedule.STSchedule` interleaves the programs'
+  batches round-robin with namespaced buffers and per-program counter
+  banks, so one queue's communication overlaps another's compute in a
+  single host dispatch — the multi-DWQ pipelined schedule.
 """
 
 from __future__ import annotations
@@ -89,6 +99,25 @@ class STProgram:
     @property
     def is_persistent(self) -> bool:
         return self.n_iters > 1 or self.until is not None
+
+    def buffers_by_pid(self) -> Dict[int, Tuple[str, ...]]:
+        """Buffer names grouped by owning program id.
+
+        A plain single-queue program owns every buffer under pid 0; a
+        composed :class:`~repro.core.schedule.STSchedule` overrides this
+        with one entry per sub-program, which is what lets the engines
+        keep stream-FIFO ordering (and counter banks) *per program*
+        instead of serializing the whole composition.
+        """
+        return {0: tuple(self.buffers)}
+
+    def concurrent_with(self, *others: "STProgram",
+                        name: Optional[str] = None) -> "STProgram":
+        """Fuse this program with ``others`` into one
+        :class:`~repro.core.schedule.STSchedule` — sugar for
+        ``compose(self, *others)`` (see :mod:`repro.core.schedule`)."""
+        from .schedule import compose  # local import: schedule imports us
+        return compose(self, *others, name=name)
 
     def persistent(self, n_iters: int,
                    until: Optional[Callable[[Any], Any]] = None) -> "STProgram":
@@ -259,9 +288,15 @@ class STQueue:
 
     def free(self) -> None:
         """MPIX_Free_queue: releases the queue.  Caller is responsible for
-        having completed outstanding work (paper §III-A)."""
+        having completed outstanding work (paper §III-A).
+
+        Also drops the built-program cache: a program built, freed, then
+        rebuilt under a reused queue name must never be served
+        descriptors that reference the freed queue's resources.
+        """
         self._check_live()
         self._freed = True
+        self._built = None
 
     # -- build ---------------------------------------------------------------
 

@@ -1,0 +1,262 @@
+"""STSchedule — compose concurrent STQueues into ONE device program.
+
+The paper's ST model keeps one deferred-work queue per GPU stream.  Real
+Nekbone-style solves want *several* queues in flight, so one queue's
+communication overlaps another queue's compute — the multi-DWQ schedule
+of "Understanding GPU Triggering APIs for MPI+X Communication"
+(arXiv:2406.05594) and the fully offloaded follow-on (arXiv:2306.15773).
+Running each queue's persistent loop as its own host dispatch pays one
+dispatch per queue and gives the device no chance to interleave them.
+
+:func:`compose` fuses N *matched* :class:`~repro.core.queue.STProgram`\\ s
+into one :class:`STSchedule` (an ``STProgram`` subclass), with
+
+* **namespaced buffers** — program ``p``'s buffer ``b`` becomes
+  ``"p/b"``, so no memory is shared between sub-programs (static
+  analysis rejects cross-program buffer aliasing: composing two
+  programs with the same name — e.g. a program with itself — is an
+  error);
+* **program identity** — every descriptor, batch and buffer carries the
+  sub-program's ``pid``, which the engines use to keep one
+  trigger/completion counter bank *per program* (the multi-queue
+  analogue of one counter pair per ``MPIX_Queue``) and to scope
+  stream-FIFO ordering per program instead of serializing the whole
+  composition;
+* **round-robin batch interleaving** — each program's descriptor stream
+  is split into *segments* at its trigger/wait gates (a segment ends
+  after each ``start``, and after each ``wait`` that does not fall
+  inside an open batch), and the segments are merged round-robin.
+  Program B's packs and kernels therefore sit *between* program A's
+  ``start`` and A's ``wait`` in the fused stream: software pipelining
+  of the queues.  A batch's descriptors are never split across
+  segments, and each program's internal FIFO order is preserved
+  exactly (property-tested).
+
+Per-program iteration counts and termination predicates ride along:
+``compose(pA.persistent(50, until=predA), pB.persistent(40, until=predB))``
+yields a schedule the persistent engine runs until **all** programs'
+predicates terminate, freezing each program's state at its own
+convergence point and reporting a per-program realized iteration count
+(see :class:`~repro.core.engine_persistent.PersistentEngine`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from .descriptors import (
+    CollDesc,
+    KernelDesc,
+    RecvDesc,
+    SendDesc,
+    StartDesc,
+    WaitDesc,
+)
+from .matching import Batch
+from .queue import STProgram
+
+
+class ScheduleError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class SubProgram:
+    """Composition metadata for one fused program."""
+
+    name: str
+    pid: int
+    buffers: Tuple[str, ...]     # namespaced buffer names owned by this pid
+    n_iters: int                 # per-program iteration count / bound
+    until: Optional[Any]         # per-program termination predicate
+    batch_lo: int                # first (renumbered) batch index
+    n_batches: int
+
+
+@dataclasses.dataclass
+class STSchedule(STProgram):
+    """N concurrent STPrograms fused into one device-resident program.
+
+    ``n_iters`` on the schedule is the max over the sub-programs (the
+    global loop bound); per-program counts/predicates live in ``subs``.
+    """
+
+    subs: Tuple[SubProgram, ...] = ()
+
+    def buffers_by_pid(self) -> Dict[int, Tuple[str, ...]]:
+        return {s.pid: s.buffers for s in self.subs}
+
+    def sub(self, name: str) -> SubProgram:
+        for s in self.subs:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    def buffer_name(self, sub: str, buf: str) -> str:
+        """The namespaced name of ``buf`` inside sub-program ``sub``."""
+        ns = f"{sub}/{buf}"
+        if ns not in self.buffers:
+            raise KeyError(ns)
+        return ns
+
+    def persistent(self, n_iters, until=None) -> "STProgram":
+        raise ScheduleError(
+            "persistence is per-program under composition: call "
+            ".persistent(...) on each program BEFORE compose(), so every "
+            "queue keeps its own iteration count and predicate"
+        )
+
+
+def _segments(descs) -> List[List[Any]]:
+    """Split one program's descriptor stream at its trigger/wait gates.
+
+    A segment ends after each ``StartDesc``, and after each ``WaitDesc``
+    that is not inside an open batch (i.e. no send/recv/coll enqueued
+    since the last start) — so a batch's deferred ops and its trigger
+    always land in the same segment and can never be interleaved with
+    another program's descriptors.
+    """
+    segs: List[List[Any]] = []
+    cur: List[Any] = []
+    open_batch = False
+    for d in descs:
+        cur.append(d)
+        if isinstance(d, (SendDesc, RecvDesc, CollDesc)):
+            open_batch = True
+        elif isinstance(d, StartDesc):
+            open_batch = False
+            segs.append(cur)
+            cur = []
+        elif isinstance(d, WaitDesc) and not open_batch:
+            segs.append(cur)
+            cur = []
+    if cur:
+        segs.append(cur)
+    return segs
+
+
+def _interleave(per_prog_segments: List[List[List[Any]]]) -> Tuple[Any, ...]:
+    """Round-robin merge of the programs' segment lists."""
+    out: List[Any] = []
+    rounds = max((len(s) for s in per_prog_segments), default=0)
+    for r in range(rounds):
+        for segs in per_prog_segments:
+            if r < len(segs):
+                out.extend(segs[r])
+    return tuple(out)
+
+
+def compose(*programs: STProgram, name: Optional[str] = None) -> STSchedule:
+    """Fuse N matched STPrograms into one :class:`STSchedule`.
+
+    Buffers are namespaced ``"{program.name}/{buffer}"``; descriptors and
+    batches are tagged with their program's ``pid``; batch indices are
+    renumbered to be globally unique; and the programs' descriptor
+    streams are interleaved round-robin at trigger/wait-gate granularity
+    (see :func:`_segments`).  Every engine accepts the result: the fused
+    engine runs one interleaved pass, the persistent engine runs the
+    whole multi-queue loop — per-program counts and predicates included
+    — as ONE host dispatch.
+
+    Raises :class:`ScheduleError` for programs on different meshes,
+    duplicate program names (cross-program buffer aliasing — composing
+    a program with itself is the canonical offender), or nested
+    schedules (compose all leaves in one call instead).
+    """
+    if not programs:
+        raise ScheduleError("compose() needs at least one program")
+    mesh = programs[0].mesh
+    names = [p.name for p in programs]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ScheduleError(
+            f"cross-program buffer aliasing: duplicate program name(s) "
+            f"{dupes} would map distinct programs onto the same buffer "
+            f"namespace (build each queue with a distinct name)"
+        )
+    for p in programs:
+        if isinstance(p, STSchedule):
+            raise ScheduleError(
+                f"nested composition: {p.name!r} is already a schedule — "
+                f"compose all leaf programs in a single compose() call"
+            )
+        if p.mesh is not mesh and p.mesh != mesh:
+            raise ScheduleError(
+                f"program {p.name!r} lives on a different mesh than "
+                f"{programs[0].name!r}; composed queues share one device grid"
+            )
+
+    buffers: Dict[str, Any] = {}
+    batches: List[Batch] = []
+    subs: List[SubProgram] = []
+    per_prog_segments: List[List[List[Any]]] = []
+    batch_lo = 0
+
+    for pid, prog in enumerate(programs):
+        ns = prog.name
+        rename = {b: f"{ns}/{b}" for b in prog.buffers}
+        for b, spec in prog.buffers.items():
+            new = rename[b]
+            if new in buffers:  # unreachable given the name check; belt+braces
+                raise ScheduleError(f"buffer alias {new!r}")
+            buffers[new] = dataclasses.replace(spec, name=new)
+
+        memo: Dict[int, Any] = {}
+
+        def rn(d, _rename=rename, _pid=pid, _lo=batch_lo, _memo=memo,
+               _ns=ns):
+            got = _memo.get(id(d))
+            if got is not None:
+                return got
+            if isinstance(d, KernelDesc):
+                new = dataclasses.replace(
+                    d, reads=tuple(_rename[r] for r in d.reads),
+                    writes=tuple(_rename[w] for w in d.writes), pid=_pid)
+            elif isinstance(d, SendDesc):
+                new = dataclasses.replace(d, buf=_rename[d.buf], pid=_pid)
+            elif isinstance(d, RecvDesc):
+                new = dataclasses.replace(d, buf=_rename[d.buf], pid=_pid)
+            elif isinstance(d, CollDesc):
+                new = dataclasses.replace(d, buf=_rename[d.buf],
+                                          out=_rename[d.out], pid=_pid)
+            elif isinstance(d, StartDesc):
+                new = dataclasses.replace(d, batch=d.batch + _lo, pid=_pid)
+            elif isinstance(d, WaitDesc):
+                new = dataclasses.replace(d, batch=d.batch + _lo, pid=_pid)
+            else:
+                raise ScheduleError(
+                    f"program {_ns!r} holds an unknown descriptor {d!r}")
+            _memo[id(d)] = new
+            return new
+
+        descs = [rn(d) for d in prog.descriptors]
+        for b in prog.batches:
+            batches.append(Batch(
+                index=b.index + batch_lo,
+                kernels_before=[rn(k) for k in b.kernels_before],
+                channels=[dataclasses.replace(
+                    ch, src_buf=rename[ch.src_buf],
+                    dst_buf=rename[ch.dst_buf]) for ch in b.channels],
+                colls=[rn(c) for c in b.colls],
+                waited=b.waited,
+                pid=pid,
+            ))
+        subs.append(SubProgram(
+            name=ns, pid=pid, buffers=tuple(rename.values()),
+            n_iters=prog.n_iters, until=prog.until,
+            batch_lo=batch_lo, n_batches=prog.n_batches,
+        ))
+        per_prog_segments.append(_segments(descs))
+        batch_lo += prog.n_batches
+
+    return STSchedule(
+        buffers=buffers,
+        descriptors=_interleave(per_prog_segments),
+        batches=tuple(batches),
+        mesh=mesh,
+        name=name or "+".join(names),
+        n_iters=max(p.n_iters for p in programs),
+        until=None,
+        subs=tuple(subs),
+    )

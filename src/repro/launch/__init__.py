@@ -4,14 +4,17 @@ from .steps import (
     StepBundle,
     build_bundle,
     build_persistent_train_step,
+    build_pipelined_train_step,
     build_prefill_step,
     build_serve_step,
     build_train_step,
     loss_plateau,
     persistent_steps,
+    pipelined_steps,
 )
 
 __all__ = ["make_production_mesh", "make_host_mesh", "StepBundle",
            "build_bundle", "build_train_step", "build_prefill_step",
            "build_serve_step", "build_persistent_train_step",
-           "persistent_steps", "loss_plateau"]
+           "build_pipelined_train_step",
+           "persistent_steps", "pipelined_steps", "loss_plateau"]

@@ -68,6 +68,14 @@ class StepBundle:
     in_shardings: Any
     out_shardings: Any
     input_sds: Tuple           # ShapeDtypeStructs for .lower(*input_sds)
+    # Train-only split of step_fn into its two ST-queue phases (set by
+    # build_train_step; None for prefill/serve bundles):
+    #   grad_fn(params, batch)            -> (grads, metrics)
+    #   apply_fn(params, opt_state, grads) -> (params, opt_state, metrics)
+    # ``step_fn == apply ∘ grad``; :func:`pipelined_steps` interleaves
+    # them across consecutive steps (software pipelining).
+    grad_fn: Optional[Callable] = None
+    apply_fn: Optional[Callable] = None
 
     def lower(self):
         jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
@@ -108,16 +116,26 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         for k, v in raw_sds.items()
     }
 
-    def train_step(params, opt_state, batch):
+    # The step in its two ST phases: the forward/backward "compute
+    # queue" and the gradient-collective + optimizer "apply queue".
+    # train_step chains them; pipelined_steps overlaps apply(i) with
+    # grad(i+1) instead.
+    def grad_step(params, batch):
         def loss_fn(p):
             with sharding_ctx(rules, mesh):
                 return model.loss(p, batch)
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return grads, dict(metrics)
+
+    def apply_step(params, opt_state, grads):
         lr = linear_warmup_cosine(opt_state["step"], base_lr=opt.lr,
                                   warmup_steps=max(total_steps // 50, 10),
                                   total_steps=total_steps)
-        new_params, new_opt, opt_metrics = adamw_update(
-            params, grads, opt_state, opt, lr=lr)
+        return adamw_update(params, grads, opt_state, opt, lr=lr)
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = grad_step(params, batch)
+        new_params, new_opt, opt_metrics = apply_step(params, opt_state, grads)
         metrics = dict(metrics)
         metrics.update(opt_metrics)
         return new_params, new_opt, metrics
@@ -132,7 +150,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         batch_sds,
     )
     return StepBundle(cfg, shape, mesh, rules, model, train_step,
-                      in_sh, out_sh, input_sds)
+                      in_sh, out_sh, input_sds,
+                      grad_fn=grad_step, apply_fn=apply_step)
 
 
 # --------------------------------------------------------------------------
@@ -247,6 +266,43 @@ def loss_plateau(eps: float = 1e-4, key: str = "loss"):
     return cond
 
 
+def _batch_indexer(bundle: StepBundle, n_iters: int,
+                   stacked: Optional[bool], batch) -> Callable:
+    """Resolve the stacked-vs-broadcast batch regime and return
+    ``batch_at(i)`` (see :func:`persistent_steps` for the inference
+    rules; shared with :func:`pipelined_steps`)."""
+    if stacked is not None:
+        is_stacked = bool(stacked)
+    else:
+        leaves = jax.tree.leaves(batch)
+        ref = bundle.input_sds[2] if len(bundle.input_sds) > 2 else None
+        ref_leaves = jax.tree.leaves(ref) if ref is not None else None
+        if ref_leaves and len(ref_leaves) == len(leaves):
+            if all(tuple(l.shape) == tuple(r.shape)
+                   for l, r in zip(leaves, ref_leaves)):
+                is_stacked = False
+            elif all(tuple(l.shape) == (n_iters, *r.shape)
+                     for l, r in zip(leaves, ref_leaves)):
+                is_stacked = True
+            else:
+                raise ValueError(
+                    "batch shapes match neither the per-step spec nor the "
+                    f"stacked (n_iters={n_iters}, ...) spec")
+        else:
+            is_stacked = bool(leaves) and all(
+                getattr(l, "ndim", 0) >= 1 and l.shape[0] == n_iters
+                for l in leaves)
+
+    def batch_at(i):
+        if not is_stacked:
+            return batch  # broadcast: every inner step sees the same data
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(
+                x, i, axis=0, keepdims=False), batch)
+
+    return batch_at
+
+
 def persistent_steps(bundle: StepBundle, n_iters: int, *,
                      until=None, stacked: Optional[bool] = None) -> StepBundle:
     """Device-resident multi-step bundle: ONE host dispatch for up to
@@ -288,35 +344,8 @@ def persistent_steps(bundle: StepBundle, n_iters: int, *,
         raise ValueError(f"n_iters must be >= 1, got {n_iters}")
     inner = bundle.step_fn
 
-    def _is_stacked(batch) -> bool:
-        if stacked is not None:
-            return bool(stacked)
-        leaves = jax.tree.leaves(batch)
-        ref = bundle.input_sds[2] if len(bundle.input_sds) > 2 else None
-        ref_leaves = jax.tree.leaves(ref) if ref is not None else None
-        if ref_leaves and len(ref_leaves) == len(leaves):
-            if all(tuple(l.shape) == tuple(r.shape)
-                   for l, r in zip(leaves, ref_leaves)):
-                return False
-            if all(tuple(l.shape) == (n_iters, *r.shape)
-                   for l, r in zip(leaves, ref_leaves)):
-                return True
-            raise ValueError(
-                "batch shapes match neither the per-step spec nor the "
-                f"stacked (n_iters={n_iters}, ...) spec")
-        return bool(leaves) and all(
-            getattr(l, "ndim", 0) >= 1 and l.shape[0] == n_iters
-            for l in leaves)
-
     def persistent_step(params, opt_state, batch):
-        is_stacked = _is_stacked(batch)
-
-        def batch_at(i):
-            if not is_stacked:
-                return batch  # broadcast: every inner step sees the same data
-            return jax.tree.map(
-                lambda x: jax.lax.dynamic_index_in_dim(
-                    x, i, axis=0, keepdims=False), batch)
+        batch_at = _batch_indexer(bundle, n_iters, stacked, batch)
 
         # seed the metrics carry abstractly so the step traces ONCE (in
         # the loop body), not twice in the compiled program
@@ -371,6 +400,111 @@ def build_persistent_train_step(cfg: ModelConfig, shape: ShapeConfig,
     one dispatch via :func:`persistent_steps`."""
     return persistent_steps(build_train_step(cfg, shape, mesh, **kwargs),
                             n_iters, until=until, stacked=stacked)
+
+
+def pipelined_steps(bundle: StepBundle, n_iters: int, *,
+                    stacked: Optional[bool] = None) -> StepBundle:
+    """Software-pipelined multi-step bundle: the gradient-collective +
+    optimizer *apply* of step i overlaps the forward/backward *compute*
+    of step i+1, inside ONE device-resident dispatch.
+
+    The launch-layer analogue of :func:`repro.core.schedule.compose`:
+    the train step is split into its two ST queues
+    (``bundle.grad_fn`` — the compute queue; ``bundle.apply_fn`` — the
+    gradient-collective queue, see :func:`build_train_step`), and the
+    loop body round-robins them one step out of phase::
+
+        g_0 = grad(p_0, batch_0)                       # prologue
+        for i in 1..n-1:   # both read the SAME params -> may overlap
+            g_i = grad(p_{i-1}, batch_i)               # compute, step i
+            p_i = apply(p_{i-1}, g_{i-1})              # collective+opt, step i-1
+        p_n = apply(p_{n-1}, g_{n-1})                  # epilogue
+
+    Because ``grad`` of step i and ``apply`` of step i-1 have no data
+    dependency on each other, XLA is free to run step i's backward while
+    step i-1's gradient all-reduce and optimizer update are in flight —
+    the communication/compute overlap a sequential ``step_fn`` chain
+    forbids.  The price is the classic *staleness-1* pipelined-SGD
+    semantics: step i's gradients are evaluated on parameters that do
+    not yet include step i-1's update.  ``n_iters=1`` degenerates to
+    the exact sequential step.
+
+    Metrics: stacked like :func:`persistent_steps` — slot i holds step
+    i's grad-phase metrics (loss, ...) AND the apply-phase metrics of
+    step i's own gradient application (grad_norm, lr, ...), plus
+    ``steps_done``.
+
+    Requires a bundle with the grad/apply split (train bundles have it);
+    batches follow the same stacked/broadcast regime as
+    :func:`persistent_steps`.
+    """
+    if n_iters < 1:
+        raise ValueError(f"n_iters must be >= 1, got {n_iters}")
+    if bundle.grad_fn is None or bundle.apply_fn is None:
+        raise ValueError(
+            "pipelined_steps needs the grad/apply phase split "
+            "(bundle.grad_fn/apply_fn) — build the bundle with "
+            "build_train_step")
+    grad_fn, apply_fn = bundle.grad_fn, bundle.apply_fn
+
+    def pipelined_step(params, opt_state, batch):
+        batch_at = _batch_indexer(bundle, n_iters, stacked, batch)
+
+        # seed the stacked metrics carry abstractly (trace once)
+        grads_sd, gmet_sd = jax.eval_shape(grad_fn, params, batch_at(0))
+        _, _, omet_sd = jax.eval_shape(apply_fn, params, opt_state, grads_sd)
+        overlap = set(gmet_sd) & set(omet_sd)
+        if overlap:
+            raise ValueError(
+                f"grad/apply metrics keys collide: {sorted(overlap)}")
+        met0 = {
+            k: jnp.zeros((n_iters, *sd.shape), sd.dtype)
+            for k, sd in {**gmet_sd, **omet_sd}.items()
+        }
+
+        def record(mets, m, i):
+            out = dict(mets)
+            for k, v in m.items():
+                out[k] = jax.lax.dynamic_update_index_in_dim(
+                    mets[k], jnp.asarray(v, mets[k].dtype), i, axis=0)
+            return out
+
+        # prologue: compute step 0's gradients (nothing to apply yet)
+        g_prev, gmet = grad_fn(params, batch_at(0))
+        mets = record(met0, gmet, 0)
+
+        def body(i, carry):
+            p, o, g_prev, mets = carry
+            # compute queue, step i — reads the PRE-apply params, so it
+            # carries no dependency on the apply below (overlap window)
+            g_i, gmet = grad_fn(p, batch_at(i))
+            # gradient-collective queue, step i-1
+            p, o, omet = apply_fn(p, o, g_prev)
+            mets = record(mets, gmet, i)
+            mets = record(mets, omet, i - 1)
+            return p, o, g_i, mets
+
+        params, opt_state, g_prev, mets = jax.lax.fori_loop(
+            1, n_iters, body, (params, opt_state, g_prev, mets))
+
+        # epilogue: drain the pipeline (apply the last step's gradients)
+        params, opt_state, omet = apply_fn(params, opt_state, g_prev)
+        mets = record(mets, omet, n_iters - 1)
+        mets["steps_done"] = jnp.asarray(n_iters, jnp.int32)
+        return params, opt_state, mets
+
+    return dataclasses.replace(bundle, step_fn=pipelined_step)
+
+
+def build_pipelined_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                               mesh: Mesh, n_iters: int,
+                               stacked: Optional[bool] = None,
+                               **kwargs) -> StepBundle:
+    """:func:`build_train_step`, then software-pipeline ``n_iters``
+    steps (apply of step i overlapping compute of step i+1) into one
+    dispatch via :func:`pipelined_steps`."""
+    return pipelined_steps(build_train_step(cfg, shape, mesh, **kwargs),
+                           n_iters, stacked=stacked)
 
 
 def build_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

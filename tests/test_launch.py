@@ -193,6 +193,31 @@ def _toy_bundle():
                       out_shardings=None, input_sds=()), toy_step
 
 
+def _toy_split_bundle():
+    """A toy bundle with the grad/apply phase split pipelined_steps
+    needs (mirrors build_train_step's two ST queues)."""
+    import jax.numpy as jnp
+
+    from repro.launch.steps import StepBundle
+
+    def toy_grad(params, batch):
+        return batch * 2.0, {"loss": jnp.sum(params)}
+
+    def toy_apply(params, opt_state, grads):
+        return params - 0.1 * grads, opt_state + 1, {"gnorm": jnp.sum(grads)}
+
+    def toy_step(p, o, b):
+        g, m = toy_grad(p, b)
+        p, o, om = toy_apply(p, o, g)
+        return p, o, {**m, **om}
+
+    bundle = StepBundle(cfg=None, shape=None, mesh=None, rules=None,
+                        model=None, step_fn=toy_step, in_shardings=None,
+                        out_shardings=None, input_sds=(),
+                        grad_fn=toy_grad, apply_fn=toy_apply)
+    return bundle, toy_grad, toy_apply
+
+
 def test_persistent_steps_validates_and_wraps():
     """Fast checks: n_iters guard + the fori_loop wrap itself, on a toy
     StepBundle (no model compile) — N wrapped steps == N sequential,
@@ -282,6 +307,131 @@ def test_persistent_steps_until_plateau():
                             stacked=False)
     _, oF, metF = jax.jit(full.step_fn)(p0, o0, jnp.ones(4))
     assert int(metF["steps_done"]) == 4 and int(oF) == 4
+
+
+def test_pipelined_steps_matches_staleness1_reference():
+    """pipelined_steps overlaps apply(i-1) with grad(i): the realized
+    schedule is the classic staleness-1 pipeline, checked against a
+    hand-rolled python reference."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import pipelined_steps
+
+    bundle, toy_grad, toy_apply = _toy_split_bundle()
+    n = 4
+    stacked = jnp.stack([jnp.full(3, float(i + 1)) for i in range(n)])
+    wrapped = pipelined_steps(bundle, n)
+    assert wrapped is not bundle
+    pN, oN, met = jax.jit(wrapped.step_fn)(jnp.zeros(3), jnp.int32(0),
+                                           stacked)
+
+    # reference: same software-pipelined schedule, sequentially
+    p, o = jnp.zeros(3), 0
+    g_prev, m = toy_grad(p, stacked[0])
+    losses, gnorms = [float(m["loss"])], []
+    for i in range(1, n):
+        g_i, m = toy_grad(p, stacked[i])        # pre-apply params
+        p, o, om = toy_apply(p, o, g_prev)      # apply step i-1
+        losses.append(float(m["loss"]))
+        gnorms.append(float(om["gnorm"]))
+        g_prev = g_i
+    p, o, om = toy_apply(p, o, g_prev)          # drain
+    gnorms.append(float(om["gnorm"]))
+
+    np.testing.assert_allclose(np.asarray(pN), np.asarray(p))
+    assert int(oN) == n and int(met["steps_done"]) == n
+    # slot i: step i's grad metrics AND step i's own apply metrics
+    np.testing.assert_allclose(np.asarray(met["loss"]), losses)
+    np.testing.assert_allclose(np.asarray(met["gnorm"]), gnorms)
+
+
+def test_pipelined_steps_single_step_is_sequential():
+    """n_iters=1 degenerates to the exact sequential step (no
+    staleness: grad then apply)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import pipelined_steps
+
+    bundle, _, _ = _toy_split_bundle()
+    p0, o0, b = jnp.ones(3), jnp.int32(0), jnp.full(3, 2.0)
+    p1, o1, met1 = jax.jit(pipelined_steps(bundle, 1).step_fn)(p0, o0, b)
+    ps, os_, mets = bundle.step_fn(p0, o0, b)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(ps))
+    assert int(o1) == int(os_) == 1
+    np.testing.assert_allclose(float(met1["loss"][0]), float(mets["loss"]))
+    np.testing.assert_allclose(float(met1["gnorm"][0]), float(mets["gnorm"]))
+
+
+def test_pipelined_steps_validates():
+    import jax.numpy as jnp
+
+    from repro.launch.steps import pipelined_steps
+
+    split_bundle, _, _ = _toy_split_bundle()
+    with pytest.raises(ValueError, match="n_iters"):
+        pipelined_steps(split_bundle, 0)
+    # a bundle without the grad/apply split (e.g. serve) is rejected
+    plain_bundle, _ = _toy_bundle()
+    with pytest.raises(ValueError, match="grad/apply"):
+        pipelined_steps(plain_bundle, 2)
+    # colliding metric keys between the two phases are rejected
+    bad, _, _ = _toy_split_bundle()
+    bad.apply_fn = lambda p, o, g: (p, o, {"loss": jnp.sum(g)})
+    with pytest.raises(ValueError, match="collide"):
+        bad = pipelined_steps(bad, 2)
+        bad.step_fn(jnp.zeros(3), jnp.int32(0), jnp.ones(3))
+
+
+def test_build_pipelined_train_step_on_real_model():
+    """The real-model pipeline: staleness-1 schedule against an explicit
+    two-phase python loop using the bundle's own grad/apply split."""
+    import jax
+
+    from repro.configs.base import ModelConfig, ShapeConfig
+    from repro.launch.steps import build_pipelined_train_step, build_train_step
+    from repro.optim import AdamWConfig, adamw_init
+    from repro.parallel import make_mesh
+
+    cfg = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=64, remat="none",
+                      scan_layers=False)
+    shape = ShapeConfig("t", 16, 2, "train")
+    mesh = make_mesh((1,), ("data",))
+    opt = AdamWConfig(lr=1e-3)
+    n = 3
+
+    b1 = build_train_step(cfg, shape, mesh, opt=opt)
+    assert b1.grad_fn is not None and b1.apply_fn is not None
+    bN = build_pipelined_train_step(cfg, shape, mesh, n_iters=n, opt=opt,
+                                    stacked=False)
+    params, _ = b1.model.init(jax.random.PRNGKey(0))
+    opt_state = adamw_init(params, opt)
+    from repro.data.synthetic import SyntheticTokens
+    batch = {k: jax.numpy.asarray(v)
+             for k, v in SyntheticTokens(cfg, shape).batch(0).items()}
+
+    with mesh:
+        pN, oN, metN = jax.jit(bN.step_fn)(params, opt_state, batch)
+        # reference: the same pipeline, phase by phase on the host
+        p, o = params, opt_state
+        g_prev, m = b1.grad_fn(p, batch)
+        losses = [float(m["loss"])]
+        for _ in range(1, n):
+            g_i, m = b1.grad_fn(p, batch)
+            p, o, _ = b1.apply_fn(p, o, g_prev)
+            losses.append(float(m["loss"]))
+            g_prev = g_i
+        p, o, _ = b1.apply_fn(p, o, g_prev)
+
+    assert int(metN["steps_done"]) == n and int(oN["step"]) == n
+    np.testing.assert_allclose(np.asarray(metN["loss"], np.float64), losses,
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(pN)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-3)
 
 
 def test_train_rejects_plateau_without_inner_steps():

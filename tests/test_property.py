@@ -10,10 +10,13 @@ from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
 from repro.core.descriptors import (
+    CollDesc,
     GridOffsetPeer,
+    KernelDesc,
     OffsetPeer,
     RecvDesc,
     SendDesc,
+    StartDesc,
     perm_for,
 )
 from repro.core.matching import MatchError, match_batch
@@ -77,6 +80,92 @@ def test_perm_injective_and_in_range(peer, nx, ny):
     assert len(set(srcs)) == len(srcs)
     assert len(set(dsts)) == len(dsts)
     assert all(0 <= s < n and 0 <= d < n for s, d in pairs)
+
+
+# -- composition: per-program FIFO order and batch atomicity -------------------
+
+# a program spec is a list of batches; each batch is (n_kernels, n_msgs,
+# wait_after) — built into a real STQueue program on a shared 1-device mesh
+batch_st = st.tuples(st.integers(0, 2), st.integers(1, 3), st.booleans())
+program_st = st.lists(batch_st, min_size=1, max_size=4)
+
+
+def _build_program(mesh, name, spec):
+    from repro.core import STQueue
+
+    q = STQueue(mesh, name=name)
+    q.buffer("a", (4,), np.float32, pspec=("x",))
+    q.buffer("b", (4,), np.float32, pspec=("x",))
+    tag = 0
+    for bi, (n_kernels, n_msgs, wait_after) in enumerate(spec):
+        for k in range(n_kernels):
+            q.enqueue_kernel(lambda a: a * 2.0, ["a"], ["a"],
+                             name=f"k{bi}_{k}")
+        for _ in range(n_msgs):
+            q.enqueue_recv("b", OffsetPeer("x", -1, periodic=True), tag=tag)
+            q.enqueue_send("a", OffsetPeer("x", 1, periodic=True), tag=tag)
+            tag += 1
+        q.enqueue_start()
+        if wait_after:
+            q.enqueue_wait()
+    return q.build()
+
+
+def _strip_ns(desc):
+    """Descriptor identity modulo namespacing/renumbering, for order
+    comparison."""
+    if isinstance(desc, KernelDesc):
+        return ("kernel", desc.name)
+    if isinstance(desc, SendDesc):
+        return ("send", desc.buf.split("/", 1)[-1], desc.tag)
+    if isinstance(desc, RecvDesc):
+        return ("recv", desc.buf.split("/", 1)[-1], desc.tag)
+    if isinstance(desc, CollDesc):
+        return ("coll", desc.op, desc.buf.split("/", 1)[-1])
+    if isinstance(desc, StartDesc):
+        return ("start",)
+    return ("wait",)
+
+
+@SETTINGS
+@given(program_st, program_st)
+def test_compose_preserves_fifo_and_batch_atomicity(spec_a, spec_b):
+    from repro.core import compose
+    from repro.parallel import make_mesh
+
+    mesh = make_mesh((1,), ("x",))
+    pa = _build_program(mesh, "A", spec_a)
+    pb = _build_program(mesh, "B", spec_b)
+    sched = compose(pa, pb)
+
+    # 1. each program's internal FIFO order survives composition exactly
+    for pid, orig in ((0, pa), (1, pb)):
+        mine = [d for d in sched.descriptors if d.pid == pid]
+        assert [_strip_ns(d) for d in mine] == \
+            [_strip_ns(d) for d in orig.descriptors]
+
+    # 2. no interleaving within a batch: from the first deferred comm op
+    # of any batch to its covering start, every descriptor shares a pid
+    open_pid = None
+    for d in sched.descriptors:
+        if isinstance(d, (SendDesc, RecvDesc, CollDesc)):
+            assert open_pid in (None, d.pid), (
+                f"batch of pid {open_pid} interleaved with pid {d.pid}")
+            open_pid = d.pid
+        elif isinstance(d, StartDesc):
+            assert open_pid in (None, d.pid)
+            open_pid = None
+        elif open_pid is not None:
+            # kernels/waits inside an open batch must belong to it
+            assert d.pid == open_pid
+
+    # 3. composed batches keep their per-program channel counts
+    for pid, orig in ((0, pa), (1, pb)):
+        mine = sorted((b for b in sched.batches if b.pid == pid),
+                      key=lambda b: b.index)
+        assert [len(b.channels) for b in mine] == \
+            [len(b.channels) for b in orig.batches]
+        assert [b.waited for b in mine] == [b.waited for b in orig.batches]
 
 
 # -- sharding: resolved specs always divide the shape ---------------------------

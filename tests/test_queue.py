@@ -108,6 +108,29 @@ class TestQueueAPI:
         assert q.build().name == q.name
         assert q.build() is q.build()
 
+    def test_free_invalidates_built_program_cache(self):
+        # regression: free() must drop the built-program cache — a
+        # program built, freed, then rebuilt from a reused queue name
+        # must never be served descriptors from the freed queue
+        q = _queue()
+        q.enqueue_recv("b", OffsetPeer("x", -1), tag=0)
+        q.enqueue_send("a", OffsetPeer("x", 1), tag=0)
+        q.enqueue_start()
+        stale = q.build()
+        q.free()
+        assert q._built is None  # cache dropped with the queue
+        with pytest.raises(QueueError, match="use-after-free"):
+            q.build()
+        # a fresh queue reusing the name builds its own program, not the
+        # freed queue's cached one
+        q2 = _queue()
+        q2.enqueue_recv("b", OffsetPeer("x", -1), tag=5)
+        q2.enqueue_send("a", OffsetPeer("x", 1), tag=5)
+        q2.enqueue_start()
+        rebuilt = q2.build()
+        assert rebuilt is not stale
+        assert rebuilt.descriptors != stale.descriptors
+
     def test_wait_marks_all_earlier_batches_waited(self):
         # regression: completion counters are cumulative, so ONE trailing
         # wait quiesces every batch <= its own — earlier unwaited batches

@@ -1,0 +1,458 @@
+"""STSchedule / compose — multi-queue pipelined composition.
+
+Fast lane: single-device (1,1,1 periodic grid) correctness of the
+composed program against independent per-program runs (bit-equality —
+composition must not perturb either program's numerics), structural
+invariants of the interleaving, the per-program counter banks, the
+error surface, and the halo front-end.
+
+Slow lane: the same contrasts on a real 2×2×2 8-device grid
+(subprocess, like tests/test_persistent.py).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacesConfig,
+    FusedEngine,
+    HostEngine,
+    OffsetPeer,
+    PersistentEngine,
+    ScheduleError,
+    STQueue,
+    STSchedule,
+    build_faces_program,
+    compose,
+    faces_oracle,
+    half_config,
+    merge_halves,
+    run_faces_persistent,
+    run_faces_pipelined,
+    run_faces_until_converged,
+    split_halves,
+)
+from repro.core.descriptors import (
+    CollDesc,
+    KernelDesc,
+    RecvDesc,
+    SendDesc,
+    StartDesc,
+    WaitDesc,
+)
+from repro.core.halo import AXES3
+from repro.core.schedule import _segments
+
+
+def _mesh111():
+    from repro.parallel import make_mesh
+    return make_mesh((1, 1, 1), AXES3)
+
+
+def _meshx():
+    from repro.parallel import make_mesh
+    return make_mesh((1,), ("x",))
+
+
+def _u0(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randn(*cfg.grid, *cfg.points).astype(np.float32)
+
+
+def _tiny_program(mesh, name, n_batches=1, waited=True):
+    q = STQueue(mesh, name=name)
+    q.buffer("a", (4,), np.float32, pspec=("x",))
+    q.buffer("b", (4,), np.float32, pspec=("x",))
+    for t in range(n_batches):
+        q.enqueue_kernel(lambda a: a * 2.0, ["a"], ["a"], name=f"k{t}")
+        q.enqueue_recv("b", OffsetPeer("x", -1, periodic=True), tag=t)
+        q.enqueue_send("a", OffsetPeer("x", 1, periodic=True), tag=t)
+        q.enqueue_start()
+    if waited:
+        q.enqueue_wait()
+    return q.build()
+
+
+# -- structure ----------------------------------------------------------------
+
+
+class TestComposeStructure:
+    def test_namespacing_and_sub_metadata(self):
+        mesh = _meshx()
+        pa = _tiny_program(mesh, "A", n_batches=2)
+        pb = _tiny_program(mesh, "B", n_batches=1)
+        sched = compose(pa, pb)
+        assert isinstance(sched, STSchedule)
+        assert sched.name == "A+B"
+        assert set(sched.buffers) == {"A/a", "A/b", "B/a", "B/b"}
+        assert sched.buffers["A/a"].name == "A/a"
+        assert [s.name for s in sched.subs] == ["A", "B"]
+        assert sched.buffers_by_pid() == {0: ("A/a", "A/b"),
+                                          1: ("B/a", "B/b")}
+        assert sched.buffer_name("B", "a") == "B/a"
+        with pytest.raises(KeyError):
+            sched.buffer_name("A", "nope")
+        # batch indices renumbered to be globally unique, pids tagged
+        assert sorted(b.index for b in sched.batches) == [0, 1, 2]
+        assert [b.pid for b in sorted(sched.batches,
+                                      key=lambda b: b.index)] == [0, 0, 1]
+        # every descriptor carries its program identity
+        for d in sched.descriptors:
+            assert d.pid in (0, 1)
+        # composition preserves totals
+        assert sched.n_batches == pa.n_batches + pb.n_batches
+        assert sched.n_channels == pa.n_channels + pb.n_channels
+        assert (sched.dispatch_count_host()
+                == pa.dispatch_count_host() + pb.dispatch_count_host())
+
+    def test_round_robin_interleaving(self):
+        """B's descriptors sit between A's start and A's wait gates."""
+        mesh = _meshx()
+        sched = compose(_tiny_program(mesh, "A"), _tiny_program(mesh, "B"))
+        pids = [d.pid for d in sched.descriptors]
+        # segments alternate: A's batch(+start), B's batch(+start),
+        # A's wait, B's wait — so pid 1 appears before pid 0's last desc
+        first_b = pids.index(1)
+        last_a = len(pids) - 1 - pids[::-1].index(0)
+        assert first_b < last_a
+        # A's wait comes after B's start: B's batch is inside A's
+        # start→wait window (the software-pipelining overlap)
+        a_wait = next(i for i, d in enumerate(sched.descriptors)
+                      if isinstance(d, WaitDesc) and d.pid == 0)
+        b_start = next(i for i, d in enumerate(sched.descriptors)
+                       if isinstance(d, StartDesc) and d.pid == 1)
+        assert b_start < a_wait
+
+    def test_fifo_order_preserved_per_program(self):
+        mesh = _meshx()
+        pa = _tiny_program(mesh, "A", n_batches=3)
+        pb = _tiny_program(mesh, "B", n_batches=2)
+        sched = compose(pa, pb)
+        for pid, orig in ((0, pa), (1, pb)):
+            mine = [d for d in sched.descriptors if d.pid == pid]
+            assert len(mine) == len(orig.descriptors)
+            for got, want in zip(mine, orig.descriptors):
+                assert type(got) is type(want)
+                if isinstance(want, (SendDesc, RecvDesc)):
+                    assert got.buf.split("/", 1)[1] == want.buf
+                    assert got.tag == want.tag
+                elif isinstance(want, KernelDesc):
+                    assert got.name == want.name
+
+    def test_segments_keep_batches_whole(self):
+        """A wait between a batch's recvs and its start must not split
+        the batch across segments."""
+        mesh = _meshx()
+        q = STQueue(mesh, "W")
+        q.buffer("a", (4,), np.float32, pspec=("x",))
+        q.buffer("b", (4,), np.float32, pspec=("x",))
+        q.enqueue_recv("b", OffsetPeer("x", -1, periodic=True), tag=0)
+        q.enqueue_send("a", OffsetPeer("x", 1, periodic=True), tag=0)
+        q.enqueue_start()
+        q.enqueue_recv("b", OffsetPeer("x", -1, periodic=True), tag=1)
+        q.enqueue_wait()  # wait on batch 0, in the middle of batch 1
+        q.enqueue_send("a", OffsetPeer("x", 1, periodic=True), tag=1)
+        q.enqueue_start()
+        q.enqueue_wait()
+        segs = _segments(list(q.build().descriptors))
+        for seg in segs:
+            # no segment may end with a batch half-open
+            open_comm = 0
+            for d in seg:
+                if isinstance(d, (SendDesc, RecvDesc, CollDesc)):
+                    open_comm += 1
+                elif isinstance(d, StartDesc):
+                    open_comm = 0
+            assert open_comm == 0
+
+    def test_compose_three_programs(self):
+        mesh = _meshx()
+        sched = compose(*[_tiny_program(mesh, n) for n in "ABC"])
+        assert [s.pid for s in sched.subs] == [0, 1, 2]
+        assert len(sched.buffers) == 6
+        assert sorted(b.index for b in sched.batches) == [0, 1, 2]
+
+
+# -- error surface ------------------------------------------------------------
+
+
+class TestComposeErrors:
+    def test_duplicate_names_rejected_as_aliasing(self):
+        mesh = _meshx()
+        pa = _tiny_program(mesh, "A")
+        with pytest.raises(ScheduleError, match="alias"):
+            compose(pa, pa)  # a program composed with itself
+
+    def test_mesh_mismatch_rejected(self):
+        from repro.parallel import make_mesh
+        pa = _tiny_program(make_mesh((1,), ("x",)), "A")
+        pb = dataclasses.replace(_tiny_program(make_mesh((1,), ("x",)), "B"),
+                                 mesh=make_mesh((1,), ("y",)))
+        with pytest.raises(ScheduleError, match="mesh"):
+            compose(pa, pb)
+
+    def test_nested_schedule_rejected(self):
+        mesh = _meshx()
+        sched = compose(_tiny_program(mesh, "A"), _tiny_program(mesh, "B"))
+        with pytest.raises(ScheduleError, match="nested"):
+            compose(sched, _tiny_program(mesh, "C"))
+
+    def test_empty_compose_rejected(self):
+        with pytest.raises(ScheduleError):
+            compose()
+
+    def test_schedule_persistent_is_per_program(self):
+        mesh = _meshx()
+        sched = compose(_tiny_program(mesh, "A"), _tiny_program(mesh, "B"))
+        with pytest.raises(ScheduleError, match="per-program"):
+            sched.persistent(4)
+
+    def test_concurrent_with_sugar(self):
+        mesh = _meshx()
+        pa, pb = _tiny_program(mesh, "A"), _tiny_program(mesh, "B")
+        sched = pa.concurrent_with(pb, name="pair")
+        assert isinstance(sched, STSchedule) and sched.name == "pair"
+
+    def test_engine_rejects_global_knobs_on_schedule(self):
+        mesh = _meshx()
+        sched = compose(_tiny_program(mesh, "A"), _tiny_program(mesh, "B"))
+        with pytest.raises(ValueError, match="n_iters"):
+            PersistentEngine(sched, n_iters=3)
+        with pytest.raises(ValueError, match="does not apply"):
+            PersistentEngine(sched, cond_fn=lambda r: r > 0,
+                             reduce_fn=lambda m: 0.0)
+        with pytest.raises(ValueError, match="unknown sub-program"):
+            PersistentEngine(sched, reduce_fns={"nope": lambda m: 0.0})
+
+    def test_engine_requires_reduce_for_predicated_sub(self):
+        mesh = _mesh111()
+        cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+        pa = build_faces_program(cfg, mesh, name="A").persistent(
+            4, until=lambda r: r >= 1e-3)
+        pb = build_faces_program(cfg, mesh, name="B").persistent(4)
+        with pytest.raises(ValueError, match="reduce_fns"):
+            PersistentEngine(compose(pa, pb))
+
+    def test_plain_program_rejects_reduce_fns(self):
+        mesh = _mesh111()
+        cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+        prog = build_faces_program(cfg, mesh)
+        with pytest.raises(ValueError, match="reduce_fns"):
+            PersistentEngine(prog, reduce_fns={"faces": lambda m: 0.0})
+
+
+# -- correctness (fast, single device) ---------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["stream", "dataflow"])
+def test_composed_fixed_bitmatches_independent(mode):
+    """compose(A, B).persistent-run == two independent persistent runs,
+    bit for bit, in ONE dispatch instead of two."""
+    n = 3
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 3, 5), periodic=True)
+    mesh = _mesh111()
+    ua, ub = _u0(cfg, seed=1), _u0(cfg, seed=2)
+    pa = build_faces_program(cfg, mesh, name="facesA").persistent(n)
+    pb = build_faces_program(cfg, mesh, name="facesB").persistent(n)
+    sched = compose(pa, pb)
+
+    eng = PersistentEngine(sched, mode=mode)
+    out = eng(eng.init_buffers({"facesA/u": ua, "facesB/u": ub}))
+    assert eng.stats.dispatches == 1
+
+    total = 0
+    for nm, u in (("facesA", ua), ("facesB", ub)):
+        mem, stats = run_faces_persistent(cfg, mesh, u, n_iters=n, mode=mode)
+        total += stats.dispatches
+        np.testing.assert_array_equal(np.asarray(out[f"{nm}/u"]),
+                                      np.asarray(mem["u"]), err_msg=nm)
+    assert total == 2  # sequential costs one dispatch per queue
+
+
+def test_composed_mixed_iteration_counts():
+    """Sub-programs with different n_iters: each freezes at its own
+    count (masked loop), matching its independent run exactly."""
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+    mesh = _mesh111()
+    ua, ub = _u0(cfg, seed=3), _u0(cfg, seed=4)
+    pa = build_faces_program(cfg, mesh, name="facesA").persistent(2)
+    pb = build_faces_program(cfg, mesh, name="facesB").persistent(5)
+    eng = PersistentEngine(compose(pa, pb), mode="dataflow")
+    mem, reds, n_done = eng(eng.init_buffers({"facesA/u": ua,
+                                              "facesB/u": ub}))
+    assert reds == {}
+    assert int(n_done["facesA"]) == 2 and int(n_done["facesB"]) == 5
+    assert eng.stats.dispatches == 1
+    for nm, u, n in (("facesA", ua, 2), ("facesB", ub, 5)):
+        ind, _ = run_faces_persistent(cfg, mesh, u, n_iters=n)
+        np.testing.assert_array_equal(np.asarray(mem[f"{nm}/u"]),
+                                      np.asarray(ind["u"]), err_msg=nm)
+
+
+@pytest.mark.parametrize("double_buffer", [True, False])
+def test_composed_per_program_predicates(double_buffer):
+    """Each half runs to its OWN tolerance inside one dispatch and
+    bit-matches an independent until-converged run (the acceptance
+    contrast of the pipelined multi-queue schedule)."""
+    cfg = FacesConfig(grid=(1, 1, 1), points=(6, 3, 4), periodic=True,
+                      damping=0.12)
+    u0 = _u0(cfg, seed=5)
+    mesh = _mesh111()
+    tols = (1e-1, 1e-3)
+    mem, reds, n_done, stats = run_faces_pipelined(
+        cfg, mesh, u0, tols=tols, max_iters=50,
+        double_buffer=double_buffer)
+    assert stats.dispatches == 1 and stats.sync_points == 0
+    assert n_done["facesA"] < n_done["facesB"] < 50  # both converged
+
+    cfgh = half_config(cfg)
+    ua, ub = split_halves(u0)
+    for nm, u, tol in (("facesA", ua, tols[0]), ("facesB", ub, tols[1])):
+        ind_mem, ind_res, ind_n, ind_stats = run_faces_until_converged(
+            cfgh, mesh, u, tol=tol, max_iters=50,
+            double_buffer=double_buffer)
+        assert ind_n == n_done[nm]
+        np.testing.assert_array_equal(np.asarray(mem[f"{nm}/u"]),
+                                      np.asarray(ind_mem["u"]), err_msg=nm)
+        np.testing.assert_array_equal(reds[nm], ind_res, err_msg=nm)
+
+
+def test_pipelined_fixed_matches_oracle():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(6, 4, 3), periodic=True)
+    u0 = _u0(cfg, seed=6)
+    mesh = _mesh111()
+    mem, stats = run_faces_pipelined(cfg, mesh, u0, n_iters=3)
+    assert stats.dispatches == 1
+    cfgh = half_config(cfg)
+    refs = []
+    for u in split_halves(u0):
+        ref = np.asarray(u)
+        for _ in range(3):
+            ref = faces_oracle(ref, cfgh)
+        refs.append(ref)
+    got = np.asarray(merge_halves(mem["facesA/u"], mem["facesB/u"]))
+    np.testing.assert_allclose(got, np.concatenate(refs, axis=3),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_split_merge_roundtrip_and_odd_points():
+    cfg = FacesConfig(grid=(1, 1, 1), points=(6, 4, 3))
+    u0 = _u0(cfg)
+    ua, ub = split_halves(u0)
+    np.testing.assert_array_equal(np.asarray(merge_halves(ua, ub)), u0)
+    with pytest.raises(ValueError, match="even"):
+        split_halves(_u0(FacesConfig(grid=(1, 1, 1), points=(5, 4, 3))))
+    with pytest.raises(ValueError, match="even"):
+        half_config(FacesConfig(grid=(1, 1, 1), points=(5, 4, 3)))
+    with pytest.raises(ValueError, match="exactly one"):
+        run_faces_pipelined(cfg, _mesh111(), u0)
+    with pytest.raises(ValueError, match="max_iters"):
+        run_faces_pipelined(cfg, _mesh111(), u0, tols=(1e-2, 1e-3))
+    with pytest.raises(ValueError, match="per half"):
+        run_faces_pipelined(cfg, _mesh111(), u0, tols=(1e-2,), max_iters=5)
+
+
+@pytest.mark.parametrize("engine_cls", [FusedEngine, HostEngine])
+def test_single_pass_engines_run_composed_programs(engine_cls):
+    """The one-pass engines execute a composed schedule too — same
+    results as running each program through them separately."""
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 3, 3), periodic=True)
+    mesh = _mesh111()
+    ua, ub = _u0(cfg, seed=7), _u0(cfg, seed=8)
+    pa = build_faces_program(cfg, mesh, name="facesA")
+    pb = build_faces_program(cfg, mesh, name="facesB")
+    eng = engine_cls(compose(pa, pb))
+    out = eng(eng.init_buffers({"facesA/u": ua, "facesB/u": ub}))
+    for nm, prog, u in (("facesA", pa, ua), ("facesB", pb, ub)):
+        ind = engine_cls(prog)
+        mem = ind(ind.init_buffers({"u": u}))
+        np.testing.assert_allclose(np.asarray(out[f"{nm}/u"]),
+                                   np.asarray(mem["u"]),
+                                   rtol=1e-6, atol=1e-6, err_msg=nm)
+
+
+def test_composed_reduce_traces_without_predicates():
+    """reduce_fns alone (no until) routes through the masked loop and
+    records every sub's trace."""
+    import jax
+    import jax.numpy as jnp
+
+    cfg = FacesConfig(grid=(1, 1, 1), points=(3, 3, 3), periodic=True)
+    mesh = _mesh111()
+    pa = build_faces_program(cfg, mesh, name="facesA").persistent(3)
+    pb = build_faces_program(cfg, mesh, name="facesB").persistent(3)
+
+    def norm(buf):
+        return lambda mem: jax.lax.psum(
+            jnp.sum(mem[buf].astype(jnp.float32) ** 2), AXES3)
+
+    eng = PersistentEngine(compose(pa, pb), mode="dataflow",
+                           reduce_fns={"facesA": norm("facesA/u"),
+                                       "facesB": norm("facesB/u")})
+    ua, ub = _u0(cfg, seed=9), _u0(cfg, seed=10)
+    mem, reds, n_done = eng(eng.init_buffers({"facesA/u": ua,
+                                              "facesB/u": ub}))
+    assert set(reds) == {"facesA", "facesB"}
+    assert reds["facesA"].shape == (3,) and reds["facesB"].shape == (3,)
+    assert int(n_done["facesA"]) == int(n_done["facesB"]) == 3
+    # cross-check one trace against the plain persistent engine
+    prog = build_faces_program(cfg, mesh).persistent(3)
+    ref = PersistentEngine(prog, mode="dataflow", reduce_fn=norm("u"))
+    _, ref_red = ref(ref.init_buffers({"u": ua}))
+    np.testing.assert_array_equal(np.asarray(reds["facesA"]),
+                                  np.asarray(ref_red))
+
+
+# -- multi-device matrix (subprocess, slow lane) ------------------------------
+
+
+@pytest.mark.slow
+def test_composed_matches_independent_8dev(subproc):
+    r = subproc("""
+import numpy as np
+from repro.core import (FacesConfig, PersistentEngine, build_faces_program,
+                        compose, half_config, run_faces_persistent,
+                        run_faces_pipelined, run_faces_until_converged,
+                        split_halves)
+from repro.parallel import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("gx", "gy", "gz"))
+cfg = FacesConfig(grid=(2, 2, 2), points=(6, 4, 4), damping=0.12)
+u0 = np.random.RandomState(0).randn(2, 2, 2, 6, 4, 4).astype(np.float32)
+
+# fixed-count composed loop, both modes.  Stream mode is bit-exact;
+# dataflow gives XLA fusion freedom, so the composed program's float
+# rounding may drift by ~1 ULP on a real multi-device grid.
+for mode in ("stream", "dataflow"):
+    mem, stats = run_faces_pipelined(cfg, mesh, u0, n_iters=3, mode=mode)
+    assert stats.dispatches == 1
+    cfgh = half_config(cfg)
+    for nm, u in zip(("facesA", "facesB"), split_halves(u0)):
+        ind, _ = run_faces_persistent(cfgh, mesh, u, n_iters=3, mode=mode)
+        if mode == "stream":
+            np.testing.assert_array_equal(np.asarray(mem[f"{nm}/u"]),
+                                          np.asarray(ind["u"]))
+        else:
+            np.testing.assert_allclose(np.asarray(mem[f"{nm}/u"]),
+                                       np.asarray(ind["u"]),
+                                       rtol=1e-6, atol=1e-7)
+
+# per-program predicates on the real grid (dataflow default)
+tols = (1e-1, 1e-2)
+mem, reds, n_done, stats = run_faces_pipelined(
+    cfg, mesh, u0, tols=tols, max_iters=40)
+assert stats.dispatches == 1
+cfgh = half_config(cfg)
+for nm, u, tol in zip(("facesA", "facesB"), split_halves(u0), tols):
+    im, ir, inn, _ = run_faces_until_converged(cfgh, mesh, u, tol=tol,
+                                               max_iters=40)
+    assert inn == n_done[nm], (nm, inn, n_done[nm])
+    np.testing.assert_allclose(np.asarray(mem[f"{nm}/u"]),
+                               np.asarray(im["u"]), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(reds[nm], ir, rtol=1e-6)
+print("composed 8dev OK")
+""")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "composed 8dev OK" in r.stdout

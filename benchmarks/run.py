@@ -12,10 +12,107 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 Prints ``name,us_per_call,derived`` CSV at the end (plus human-readable
 sections), and writes artifacts/bench_results.json.
+
+Perf-regression gate::
+
+  PYTHONPATH=src python -m benchmarks.run faces --check-against BENCH_faces.json
+
+re-measures and exits non-zero if (a) any tracked Faces variant's
+median regressed more than 20% vs the recorded file after normalizing
+by the run-wide speed factor (machines differ; one variant drifting
+beyond the rest of its own run is what counts), or (b) the
+device-resident ``faces_figP/persistent`` loop measures slower than
+re-dispatching ``fused_per_iter`` — the contract this repo's headline
+depends on.  In gate mode BENCH_faces.json is *not* rewritten (CI must
+not publish the numbers it is judging).
 """
 
 import json
 import sys
+
+# medians on the CPU grid jitter run-to-run; >20% is a regression, not noise
+CHECK_TOLERANCE = 1.20
+
+
+def check_against(faces: dict, path: str) -> int:
+    """Compare fresh Faces medians to a recorded BENCH_faces.json.
+
+    The comparison is normalized by the run-wide speed factor — the
+    median of fresh/stored ratios across all tracked variants — so a
+    uniformly slower/faster machine does not read as a regression, a
+    single variant drifting >20% beyond the rest of the run does, and
+    one variant *improving* cannot fail its unchanged siblings (with
+    ~24 tracked variants the median barely moves).  Cross-run medians
+    are only compared when the run's loop settings (``_meta``) match
+    the recorded file's, and they assume a reasonably quiet machine
+    (host-dispatch-bound baselines are very sensitive to CPU
+    contention).  The same-run invariants — persistent beats
+    per-iteration re-dispatch, the auto-tuner never publishes a slower
+    number — are enforced unconditionally; they are what CI's
+    small-grid run gates (its settings never match the recorded file,
+    so the median path never runs there).
+    """
+    with open(path) as f:
+        stored = json.load(f)
+
+    # per-variant median comparison is only meaningful when this run
+    # used the same loop settings the file was recorded with (a smaller
+    # FACES_INNER rescales host-dispatch-bound and fused variants
+    # differently); otherwise only the absolute invariants below apply
+    stored_meta = stored.get("_meta", {})
+    fresh_meta = faces.get("_meta", {})
+    compare_medians = (stored_meta == fresh_meta) or not stored_meta
+    if not compare_medians:
+        print(f"note: settings differ from recorded ({fresh_meta} vs "
+              f"{stored_meta}) — median checks skipped, invariants enforced")
+
+    def tracked(key):
+        f, s = faces.get(key), stored.get(key)
+        return (isinstance(f, dict) and f.get("median_ms")
+                and isinstance(s, dict) and s.get("median_ms"))
+
+    ratios = sorted(faces[k]["median_ms"] / stored[k]["median_ms"]
+                    for k in faces if compare_medians and tracked(k))
+    speed = ratios[len(ratios) // 2] if ratios else 1.0
+    failures = []
+    if compare_medians:
+        for key, fresh in sorted(faces.items()):
+            if not tracked(key):
+                continue
+            bound = stored[key]["median_ms"] * speed * CHECK_TOLERANCE
+            if fresh["median_ms"] > bound:
+                failures.append(
+                    f"{key}: median {fresh['median_ms']:.1f}ms vs recorded "
+                    f"{stored[key]['median_ms']:.1f}ms x run speed-factor "
+                    f"{speed:.2f} (>{(CHECK_TOLERANCE-1)*100:.0f}% "
+                    f"regression)")
+    # absolute same-run invariants: these pairs are measured back-to-back
+    # in one process, so machine speed and loop settings cancel out
+    pers = faces.get("faces_figP/persistent")
+    fused = faces.get("faces_figP/fused_per_iter")
+    if pers and fused and pers["median_ms"] > fused["median_ms"]:
+        failures.append(
+            f"faces_figP/persistent ({pers['median_ms']:.1f}ms) is slower "
+            f"than fused_per_iter ({fused['median_ms']:.1f}ms): the "
+            f"1-dispatch path must also be the fastest path")
+    tuned = faces.get("faces_fig12/st_tuned")
+    offl = faces.get("faces_fig12/st_offload")
+    if tuned and offl and tuned["median_ms"] > offl["median_ms"] * 1.05:
+        failures.append(
+            f"faces_fig12/st_tuned ({tuned['median_ms']:.1f}ms) is slower "
+            f"than untuned st_offload ({offl['median_ms']:.1f}ms): the "
+            f"auto-tuner must never publish a slower number")
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)}):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    checked = sum(1 for k in faces if tracked(k)) if compare_medians else 0
+    print(f"\nperf gate OK: {checked} tracked medians within "
+          f"{(CHECK_TOLERANCE-1)*100:.0f}% of {path} "
+          f"(speed-normalized x{speed:.2f}); invariants hold "
+          f"(persistent <= fused, tuned <= offload)")
+    return 0
 
 
 def main() -> None:
@@ -26,7 +123,13 @@ def main() -> None:
     from benchmarks import api_overhead, faces_bench, overlap_bench
     from benchmarks import roofline as roofline_mod
 
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    argv = sys.argv[1:]
+    check_path = None
+    if "--check-against" in argv:
+        i = argv.index("--check-against")
+        check_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    which = argv[0] if argv else "all"
     results = []
 
     if which in ("all", "api"):
@@ -69,6 +172,14 @@ def main() -> None:
         for r in results
         if r["bench"].startswith("faces") and "median_ms" in r
     }
+    if faces:
+        # loop settings stamp: median checks only compare like-for-like
+        faces["_meta"] = {
+            "faces_inner": int(os.environ.get("FACES_INNER", 10)),
+            "faces_max_iters": int(os.environ.get("FACES_MAX_ITERS", 64)),
+        }
+    if check_path is not None:
+        sys.exit(check_against(faces, check_path))
     if faces:
         fout = os.path.join(here, "..", "BENCH_faces.json")
         with open(fout, "w") as f:

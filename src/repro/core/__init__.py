@@ -57,7 +57,15 @@ from .halo import (
     run_faces_until_converged,
     split_halves,
 )
-from .matching import Batch, Channel, MatchError, match_batch
+from .matching import (
+    Batch,
+    Channel,
+    CoalescedChannel,
+    CoalescePlan,
+    MatchError,
+    coalesce_batch,
+    match_batch,
+)
 from .queue import QueueError, STProgram, STQueue, create_queue
 from .schedule import ScheduleError, STSchedule, SubProgram, compose
 
@@ -68,6 +76,7 @@ __all__ = [
     "OffsetPeer", "GridOffsetPeer", "PairListPeer",
     "SendDesc", "RecvDesc", "CollDesc", "KernelDesc", "StartDesc", "WaitDesc",
     "BufferSpec", "Batch", "Channel", "MatchError", "match_batch",
+    "CoalescedChannel", "CoalescePlan", "coalesce_batch",
     "TriggerCounter", "CompletionCounter", "fresh_token", "bump", "tie",
     "gate", "completion_from",
     "FacesConfig", "build_faces_program", "faces_oracle",

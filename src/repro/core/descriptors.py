@@ -142,6 +142,40 @@ def perm_for(peer: Peer, mesh_shape: dict) -> Tuple[str, Sequence[Tuple[int, int
     raise TypeError(f"unknown peer spec: {peer!r}")
 
 
+def hop_decomposition(peer: Peer, axis_order: Sequence[str]):
+    """Decompose a peer spec into an ordered list of single-axis hops.
+
+    A grid offset ``(dx, dy, dz)`` is the composition of one shift per
+    nonzero component; routing a message through those shifts one mesh
+    axis at a time delivers bit-identical payloads to the direct
+    multi-axis ``ppermute`` (data is relayed verbatim, and on a
+    non-periodic grid every intermediate rank of an axis-ordered path
+    exists iff the direct source rank exists).  This is what lets the
+    coalescing layer (:mod:`.matching`) share ONE by-axis transfer
+    between every channel that hops the same ``(axis, delta)``.
+
+    Hops are emitted in ``axis_order`` (the mesh's axis order) so all
+    channels agree on stage numbering.  Returns ``[(axis, delta,
+    periodic), ...]`` or ``None`` for peers with no offset structure
+    (``PairListPeer`` — coalescable only with channels sharing its
+    exact permutation).
+    """
+    if isinstance(peer, OffsetPeer):
+        return [(peer.axis, peer.delta, peer.periodic)]
+    if isinstance(peer, GridOffsetPeer):
+        order = {a: i for i, a in enumerate(axis_order)}
+        if any(a not in order for a in peer.axes):
+            return None
+        hops = sorted(
+            ((a, d, peer.periodic) for a, d in zip(peer.axes, peer.deltas)
+             if d != 0),
+            key=lambda h: order[h[0]],
+        )
+        # degenerate all-zero offset: a self-send, one identity hop
+        return hops or [(peer.axes[0], 0, peer.periodic)]
+    return None
+
+
 # --------------------------------------------------------------------------
 # Descriptors
 # --------------------------------------------------------------------------

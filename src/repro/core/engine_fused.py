@@ -94,12 +94,17 @@ class FusedEngine:
         program: STProgram,
         mode: str = "stream",
         donate: bool = False,
+        coalesce: bool = True,
     ):
         if mode not in ("stream", "dataflow"):
             raise ValueError("mode must be 'stream' or 'dataflow'")
         self.program = program
         self.mode = mode
         self.donate = donate
+        # Execute the batches' recorded coalescing plans (fused by-axis
+        # transfers) when present; False forces the per-channel lowering
+        # even on a plan-carrying program (A/B benchmarks, parity tests).
+        self.coalesce = coalesce
         self.mesh = program.mesh
         self._mesh_shape = dict(self.mesh.shape)
         self._jitted = None
@@ -157,7 +162,8 @@ class FusedEngine:
         specs = {n: P(*s.pspec) for n, s in prog.buffers.items()}
 
         body = functools.partial(_run_program, prog=prog, mode=self.mode,
-                                 mesh_shape=self._mesh_shape)
+                                 mesh_shape=self._mesh_shape,
+                                 coalesce=self.coalesce)
         # check_vma=False: Pallas calls inside the program can't declare
         # varying-mesh-axes on their out_shapes; ordering is enforced by
         # the token ties, not by vma tracking.
@@ -173,9 +179,10 @@ class FusedEngine:
 
 
 def _run_program(mem: Dict[str, jax.Array], *, prog: STProgram, mode: str,
-                 mesh_shape: Dict[str, int]) -> Dict[str, jax.Array]:
+                 mesh_shape: Dict[str, int],
+                 coalesce: bool = True) -> Dict[str, jax.Array]:
     mem, _, _ = _interpret_program(mem, prog=prog, mode=mode,
-                                   mesh_shape=mesh_shape)
+                                   mesh_shape=mesh_shape, coalesce=coalesce)
     return mem
 
 
@@ -197,6 +204,7 @@ def _interpret_program(
     mesh_shape: Dict[str, int],
     tokens: Optional[Dict[int, jax.Array]] = None,
     comp_tokens: Optional[Dict[int, jax.Array]] = None,
+    coalesce: bool = True,
 ) -> Tuple[Dict[str, jax.Array], Dict[int, jax.Array], Dict[int, jax.Array]]:
     """Interpret one pass over ``prog``'s descriptors.
 
@@ -210,6 +218,11 @@ def _interpret_program(
     banks returned by a previous pass preserves MPIX_Queue-reuse
     semantics — the counters keep advancing across iterations instead
     of restarting at zero.
+
+    With ``coalesce`` (default) a batch that carries a build-time
+    :class:`~repro.core.matching.CoalescePlan` fires its fused by-axis
+    transfers instead of one ppermute per channel; deposits replay in
+    the original channel order so results are bit-identical either way.
     """
     mem = dict(mem)
     pid_bufs = prog.buffers_by_pid()
@@ -256,19 +269,30 @@ def _interpret_program(
 
         elif isinstance(d, StartDesc):
             batch = batches_by_index[d.batch]
+            use_plan = coalesce and batch.plan is not None
             # writeValue: bump after all earlier commands of THIS
             # program's stream.
             if mode == "stream":
                 deps = [mem[b] for b in pid_bufs[pid]]
-            else:
+                tokens[pid], _ = counters.tie(tokens[pid], *deps)
+            elif not use_plan:
                 deps = [mem[b] for b in send_bufs_by_batch[d.batch]]
-            tokens[pid], _ = counters.tie(tokens[pid], *deps)
+                tokens[pid], _ = counters.tie(tokens[pid], *deps)
+            # else (dataflow + coalesced): the trigger ties only to the
+            # packed staging buffers, inside _run_coalesced_batch — the
+            # pack already depends on every source slab, so tying the
+            # whole live set would just re-materialize untouched buffers
             tokens[pid] = counters.bump(tokens[pid])
             # fire every descriptor in the batch (threshold reached)
             results = []
-            for ch in batch.channels:
-                mem, r = _run_channel(mem, ch, tokens[pid], mesh_shape)
-                results.append(r)
+            if use_plan:
+                mem, rs = _run_coalesced_batch(mem, batch.plan, tokens[pid],
+                                               mesh_shape)
+                results.extend(rs)
+            else:
+                for ch in batch.channels:
+                    mem, r = _run_channel(mem, ch, tokens[pid], mesh_shape)
+                    results.append(r)
             for coll in batch.colls:
                 mem, r = _run_collective(mem, coll, tokens[pid], prog)
                 results.append(r)
@@ -297,17 +321,16 @@ def _interpret_program(
     return mem, tokens, comp_tokens
 
 
-def _run_channel(mem, ch: Channel, token, mesh_shape):
-    """One matched (send, recv) pair → one ppermute, tied to the trigger."""
-    axes = _axes_tuple(ch.axis)
-    src = mem[ch.src_buf]
-    if ch.send_region is not None:
-        src = src[ch.send_region]
-    # DWQ deferred execution: operand depends on the trigger counter.
-    _, (src,) = counters.tie(token, src)
-    perm = ch.perm(mesh_shape)
-    received = jax.lax.ppermute(src, axes if len(axes) > 1 else axes[0], perm)
+def _deposit_channel(mem, ch: Channel, received, mesh_shape):
+    """Deposit one channel's received slab into its destination buffer.
 
+    Shared by the per-channel and coalesced lowerings (same ops, same
+    order → bit-identical results).  The receiver mask always derives
+    from the channel's *original* peer permutation, independent of how
+    the payload travelled.
+    """
+    axes = _axes_tuple(ch.axis)
+    perm = ch.perm(mesh_shape)
     dst = mem[ch.dst_buf]
     region = ch.recv_region if ch.recv_region is not None else tuple(
         slice(None) for _ in dst.shape
@@ -325,6 +348,68 @@ def _run_channel(mem, ch: Channel, token, mesh_shape):
             jnp.where(is_receiver, received.astype(dst.dtype), cur)
         )
     mem[ch.dst_buf] = dst
+    return mem
+
+
+def _run_channel(mem, ch: Channel, token, mesh_shape):
+    """One matched (send, recv) pair → one ppermute, tied to the trigger."""
+    axes = _axes_tuple(ch.axis)
+    src = mem[ch.src_buf]
+    if ch.send_region is not None:
+        src = src[ch.send_region]
+    # DWQ deferred execution: operand depends on the trigger counter.
+    _, (src,) = counters.tie(token, src)
+    perm = ch.perm(mesh_shape)
+    received = jax.lax.ppermute(src, axes if len(axes) > 1 else axes[0], perm)
+    mem = _deposit_channel(mem, ch, received, mesh_shape)
+    return mem, received
+
+
+def _run_coalesced_batch(mem, plan, token, mesh_shape):
+    """Fire one batch's coalescing plan: fused by-axis transfers.
+
+    Stage by stage, each :class:`~repro.core.matching.CoalescedChannel`
+    packs its member slabs (first hop) and relayed payloads (later
+    hops) into ONE contiguous staging buffer at static offsets — the
+    paper's contiguous MPI buffer — ties it to the trigger counter, and
+    moves it with ONE single-axis ``ppermute``.  Because relays copy
+    payloads verbatim and an axis-ordered route exists iff the direct
+    source rank exists, each channel's final segment is bit-identical
+    to its direct multi-axis ppermute; deposits then replay in original
+    channel order.
+    """
+    received = []
+    for t in plan.transfers:
+        parts = []
+        for seg in t.segments:
+            if seg.hop == 0:
+                ch = plan.channels[seg.channel]
+                src = mem[ch.src_buf]
+                if ch.send_region is not None:
+                    src = src[ch.send_region]
+                parts.append(src.reshape(-1))
+            else:  # relay: verbatim copy out of the previous hop's buffer
+                pt, po = plan.routes[seg.channel][seg.hop - 1]
+                parts.append(
+                    jax.lax.slice_in_dim(received[pt], po, po + seg.size))
+        staged = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        # DWQ deferred execution: ONE tie for the whole fused transfer.
+        _, (staged,) = counters.tie(token, staged)
+        received.append(jax.lax.ppermute(staged, t.axis, t.perm))
+
+    for ci, ch in enumerate(plan.channels):
+        route = plan.routes[ci]
+        if not route:
+            # statically dead channel: its ppermute would deliver zeros
+            # on every rank — deposit them without packing or moving
+            seg = jnp.zeros(plan.shapes[ci], mem[ch.src_buf].dtype)
+            mem = _deposit_channel(mem, ch, seg, mesh_shape)
+            continue
+        ti, off = route[-1]
+        size = int(np.prod(plan.shapes[ci], dtype=np.int64))
+        seg = jax.lax.slice_in_dim(received[ti], off, off + size)
+        mem = _deposit_channel(mem, ch, seg.reshape(plan.shapes[ci]),
+                               mesh_shape)
     return mem, received
 
 

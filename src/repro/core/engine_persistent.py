@@ -32,6 +32,14 @@ with ``unroll=2`` on the loop, iteration i+1's packs write slot B while
 iteration i's waits still gate slot A, recovering the pack/wait overlap
 a NIC-offloaded persistent queue gets from alternating DWQ entries.
 
+The two copies are **zero-copy rotated**: the loop carry holds them as
+separate ``(cur, alt)`` pytree leaves and each iteration returns
+``(alt, written)`` — a pure reference swap.  No stacked ``[2, ...]``
+slot arrays, no ``dynamic_update_index`` re-materialization per
+iteration, and no parity arithmetic: after the loop the last write
+always sits in the ``alt`` position (even under a predicate-terminated
+``while_loop``, where the realized count is dynamic).
+
 Slot safety is decided statically: a buffer is double-buffered only if
 it is touched by a channel/collective and its first access in execution
 order is a write (replace-mode deposits count as writes; add-mode
@@ -51,12 +59,11 @@ exactly the host-in-the-control-path cost the ST model removes.  With
   the predicate holds (e.g. ``residual >= tol``), bounded by
   ``max_iters``.  The first iteration always runs (there is no
   reduction to test before it).
-* double buffering switches to its *carried-predicate* variant: slot
-  parity comes from a carried iteration counter (``i % 2`` with ``i``
-  in the loop carry — a ``while_loop`` has no induction variable and no
-  static unroll), and the final-slot selection uses the **dynamic**
-  last parity ``(realized - 1) % 2`` instead of the static
-  ``(n_iters - 1) % 2``.
+* double buffering needs no parity bookkeeping: the ``(cur, alt)``
+  rotation leaves the last realized write in the ``alt`` carry position
+  regardless of how many iterations the predicate allowed (a
+  ``while_loop`` has no induction variable and no static unroll, but
+  the rotation is induction-free anyway).
 * ``__call__`` returns ``(mem, reductions, n_done)``: the reduction
   trace padded with zeros to ``max_iters`` plus the realized iteration
   count — still ONE host dispatch and zero host syncs until converged.
@@ -218,8 +225,9 @@ class PersistentEngine(FusedEngine):
         max_iters: Optional[int] = None,
         reduce_fns: Optional[Dict[str, Callable]] = None,
         donate: bool = False,
+        coalesce: bool = True,
     ):
-        super().__init__(program, mode=mode, donate=donate)
+        super().__init__(program, mode=mode, donate=donate, coalesce=coalesce)
         self.reduce_fns: Dict[str, Callable] = dict(reduce_fns or {})
 
         if isinstance(program, STSchedule):
@@ -307,6 +315,7 @@ class PersistentEngine(FusedEngine):
                 mesh_shape=self._mesh_shape,
                 slots=self._slots,
                 reduce_fns=self.reduce_fns,
+                coalesce=self.coalesce,
             )
         elif self.cond_fn is not None:
             out_specs = (specs, P(), P())
@@ -319,6 +328,7 @@ class PersistentEngine(FusedEngine):
                 slots=self._slots,
                 reduce_fn=self.reduce_fn,
                 cond_fn=self.cond_fn,
+                coalesce=self.coalesce,
             )
         else:
             out_specs = (specs, P()) if self.reduce_fn is not None else specs
@@ -331,6 +341,7 @@ class PersistentEngine(FusedEngine):
                 slots=self._slots,
                 reduce_fn=self.reduce_fn,
                 unroll=2 if (self.double_buffer and self.n_iters > 1) else 1,
+                coalesce=self.coalesce,
             )
         sharded = shard_map(
             body, mesh=self.mesh, in_specs=(specs,), out_specs=out_specs,
@@ -353,42 +364,40 @@ def _run_persistent(
     slots: Tuple[str, ...],
     reduce_fn,
     unroll: int,
+    coalesce: bool = True,
 ):
     mem = dict(mem)
-    # two copies of each message slot; iteration i uses copy i % 2
-    slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
+    # two copies of each message slot, rotated zero-copy through the
+    # carry: iteration i reads `cur` (the copy written at i-2) and its
+    # write becomes the next iteration's `alt` — no stacked arrays, no
+    # per-iteration dynamic_update copies.  Both copies start as the
+    # same initial value (aliased, never materialized twice).
+    cur_slots = {n: mem.pop(n) for n in slots}
+    alt_slots = dict(cur_slots)
     tokens, comps = fresh_token_banks(prog)
     # None is an empty pytree node: no dead carry when reductions are off
     red = jnp.zeros((n_iters,), jnp.float32) if reduce_fn is not None else None
 
     def one_iter(i, carry):
-        mem, slot_mem, tokens, comps, red = carry
-        parity = jax.lax.rem(i, 2)
+        mem, cur_slots, alt_slots, tokens, comps, red = carry
         cur = dict(mem)
-        for n in slots:
-            cur[n] = jax.lax.dynamic_index_in_dim(
-                slot_mem[n], parity, axis=0, keepdims=False)
+        cur.update(cur_slots)
         cur, tokens, comps = _interpret_program(
             cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
-            tokens=tokens, comp_tokens=comps)
+            tokens=tokens, comp_tokens=comps, coalesce=coalesce)
         if reduce_fn is not None:  # sees every buffer, slots included
             val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
             red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
-        new_slots = {
-            n: jax.lax.dynamic_update_index_in_dim(
-                slot_mem[n], cur.pop(n), parity, axis=0)
-            for n in slots
-        }
-        return cur, new_slots, tokens, comps, red
+        written = {n: cur.pop(n) for n in slots}
+        return cur, alt_slots, written, tokens, comps, red
 
-    mem, slot_mem, tokens, comps, red = jax.lax.fori_loop(
-        0, n_iters, one_iter, (mem, slot_mem, tokens, comps, red),
+    mem, _, last_slots, tokens, comps, red = jax.lax.fori_loop(
+        0, n_iters, one_iter,
+        (mem, cur_slots, alt_slots, tokens, comps, red),
         unroll=unroll)
 
-    # final values live in the slot the last iteration wrote
-    last = (n_iters - 1) % 2
-    for n in slots:
-        mem[n] = slot_mem[n][last]
+    # the rotation leaves the last iteration's writes in the alt carry
+    mem.update(last_slots)
     if reduce_fn is not None:
         return mem, red
     return mem
@@ -404,18 +413,20 @@ def _run_persistent_while(
     slots: Tuple[str, ...],
     reduce_fn,
     cond_fn,
+    coalesce: bool = True,
 ):
     """Predicate-terminated variant: ``lax.while_loop`` until
     ``cond_fn(reduction)`` goes False (or ``max_iters`` is hit).
 
     The carry threads the iteration counter explicitly (a while_loop has
-    no induction variable), so slot parity is the *carried* ``i % 2``
-    and the final-slot selection below uses the dynamic last parity —
-    the realized iteration count is a runtime value here.
+    no induction variable) for the reduction-trace index; the slot
+    rotation itself is induction-free, so the last realized write sits
+    in the ``alt`` carry position however many iterations run.
     """
     mem = dict(mem)
-    # two copies of each message slot; iteration i uses copy i % 2
-    slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
+    # zero-copy rotation, as in _run_persistent
+    cur_slots = {n: mem.pop(n) for n in slots}
+    alt_slots = dict(cur_slots)
     tokens, comps = fresh_token_banks(prog)
     red = jnp.zeros((max_iters,), jnp.float32)
 
@@ -424,37 +435,27 @@ def _run_persistent_while(
         return jnp.logical_and(keep_going, i < max_iters)
 
     def body(carry):
-        i, _, mem, slot_mem, tokens, comps, red = carry
-        parity = jax.lax.rem(i, 2)
+        i, _, mem, cur_slots, alt_slots, tokens, comps, red = carry
         cur = dict(mem)
-        for n in slots:
-            cur[n] = jax.lax.dynamic_index_in_dim(
-                slot_mem[n], parity, axis=0, keepdims=False)
+        cur.update(cur_slots)
         cur, tokens, comps = _interpret_program(
             cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
-            tokens=tokens, comp_tokens=comps)
+            tokens=tokens, comp_tokens=comps, coalesce=coalesce)
         val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
         red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
-        new_slots = {
-            n: jax.lax.dynamic_update_index_in_dim(
-                slot_mem[n], cur.pop(n), parity, axis=0)
-            for n in slots
-        }
+        written = {n: cur.pop(n) for n in slots}
         keep_going = jnp.asarray(cond_fn(val), jnp.bool_).reshape(())
-        return i + 1, keep_going, cur, new_slots, tokens, comps, red
+        return i + 1, keep_going, cur, alt_slots, written, tokens, comps, red
 
     # the first iteration always runs: there is no reduction to test yet
     carry0 = (jnp.zeros((), jnp.int32), jnp.asarray(True),
-              mem, slot_mem, tokens, comps, red)
-    n_done, _, mem, slot_mem, tokens, comps, red = jax.lax.while_loop(
+              mem, cur_slots, alt_slots, tokens, comps, red)
+    n_done, _, mem, _, last_slots, tokens, comps, red = jax.lax.while_loop(
         cond, body, carry0)
 
-    # final values live in the slot the last *realized* iteration wrote —
-    # a dynamic parity, unlike the fixed-n_iters loop above
-    last = jax.lax.rem(n_done - 1, 2)
-    for n in slots:
-        mem[n] = jax.lax.dynamic_index_in_dim(
-            slot_mem[n], last, axis=0, keepdims=False)
+    # at least one iteration always ran, so the last realized write is
+    # in the alt position — no dynamic parity selection needed
+    mem.update(last_slots)
     return mem, red, n_done
 
 
@@ -466,6 +467,7 @@ def _run_schedule_while(
     mesh_shape: Dict[str, int],
     slots: Tuple[str, ...],
     reduce_fns: Dict[str, Callable],
+    coalesce: bool = True,
 ):
     """Multi-queue variant: every sub-program runs to its OWN iteration
     count / predicate inside one ``while_loop``.
@@ -474,12 +476,12 @@ def _run_schedule_while(
     per-program ``active`` flag masks the result: an inactive (already
     terminated) program's buffers, slot copies and reduction trace keep
     their frozen values, so its final state is bit-identical to an
-    independent run of that program alone.  Because ``active`` flags
-    only ever go False once and stay False, a sub's local iteration
-    index equals the global one while it is active — the slot parity
-    and trace index need no per-program counters, only the final-slot
-    selection does (each sub's last write sits at parity
-    ``(n_done[sub] - 1) % 2``).
+    independent run of that program alone.  Slot double-buffering uses
+    the same zero-copy ``(cur, alt)`` rotation as the single-program
+    loops, masked per program: an active program's pair rotates, a
+    frozen program's pair stays put — so every program's last realized
+    write ends (and stays) in the ``alt`` position, and no per-program
+    parity bookkeeping is needed.
     """
     subs = sched.subs
     max_iters = max(s.n_iters for s in subs)
@@ -487,7 +489,8 @@ def _run_schedule_while(
     pid_of_buf = {b: s.pid for s in subs for b in s.buffers}
 
     mem = dict(mem)
-    slot_mem = {n: jnp.stack([mem.pop(n)] * 2) for n in slots}
+    cur_slots = {n: mem.pop(n) for n in slots}
+    alt_slots = dict(cur_slots)
     tokens, comps = fresh_token_banks(sched)
     reds = {nm: jnp.zeros((max_iters,), jnp.float32) for nm in reduce_fns}
     active0 = {s.name: jnp.asarray(True) for s in subs}
@@ -502,15 +505,12 @@ def _run_schedule_while(
         return jnp.logical_and(any_active, i < max_iters)
 
     def body(carry):
-        i, active, ndone, mem, slot_mem, tokens, comps, reds = carry
-        parity = jax.lax.rem(i, 2)
+        i, active, ndone, mem, cur_slots, alt_slots, tokens, comps, reds = carry
         cur = dict(mem)
-        for n in slots:
-            cur[n] = jax.lax.dynamic_index_in_dim(
-                slot_mem[n], parity, axis=0, keepdims=False)
+        cur.update(cur_slots)
         new, tokens, comps = _interpret_program(
             cur, prog=sched, mode=mode, mesh_shape=mesh_shape,
-            tokens=tokens, comp_tokens=comps)
+            tokens=tokens, comp_tokens=comps, coalesce=coalesce)
 
         # per-program reductions, realized counts and continue flags
         ndone = dict(ndone)
@@ -535,28 +535,26 @@ def _run_schedule_while(
 
         # masked state update: a terminated program's buffers freeze at
         # its own convergence point (the interpreter still ran them this
-        # pass, but the results are discarded)
-        new_slots = {}
+        # pass, but the results are discarded).  Slot pairs rotate only
+        # while their program is active.
+        new_cur, new_alt = {}, {}
         for n in slots:
-            val = jnp.where(act_of(active, n), new.pop(n),
-                            jax.lax.dynamic_index_in_dim(
-                                slot_mem[n], parity, axis=0, keepdims=False))
-            new_slots[n] = jax.lax.dynamic_update_index_in_dim(
-                slot_mem[n], val, parity, axis=0)
+            act = act_of(active, n)
+            written = new.pop(n)
+            new_cur[n] = jnp.where(act, alt_slots[n], cur_slots[n])
+            new_alt[n] = jnp.where(act, written, alt_slots[n])
         out_mem = {
             n: jnp.where(act_of(active, n), new[n], mem[n]) for n in mem
         }
-        return i + 1, keep, ndone, out_mem, new_slots, tokens, comps, reds
+        return (i + 1, keep, ndone, out_mem, new_cur, new_alt,
+                tokens, comps, reds)
 
     # the first iteration always runs for every program
     carry0 = (jnp.zeros((), jnp.int32), active0, ndone0,
-              mem, slot_mem, tokens, comps, reds)
-    _, _, ndone, mem, slot_mem, tokens, comps, reds = jax.lax.while_loop(
+              mem, cur_slots, alt_slots, tokens, comps, reds)
+    _, _, ndone, mem, _, alt_slots, tokens, comps, reds = jax.lax.while_loop(
         cond, body, carry0)
 
-    # per-program final slot parity: each sub's last realized write
-    for n in slots:
-        last = jax.lax.rem(ndone[name_of_pid[pid_of_buf[n]]] - 1, 2)
-        mem[n] = jax.lax.dynamic_index_in_dim(
-            slot_mem[n], last, axis=0, keepdims=False)
+    # every program's last realized write froze in the alt position
+    mem.update(alt_slots)
     return mem, reds, ndone

@@ -151,12 +151,18 @@ def _interior_fn(u):
 
 
 def build_faces_program(cfg: FacesConfig, mesh,
-                        name: Optional[str] = None) -> STProgram:
+                        name: Optional[str] = None,
+                        coalesce: bool = True) -> STProgram:
     """Build the Faces inner-loop as an ST program on a (gx,gy,gz) mesh.
 
     ``name`` sets the program name (defaults to ``faces_{granularity}``)
     — composed programs (:func:`repro.core.schedule.compose`) need
     distinct names, since the name is the buffer namespace.
+
+    With ``coalesce`` (default) the 26 direct26 messages are grouped at
+    build time into ≤6 fused by-axis transfers — the paper's contiguous
+    MPI buffer (§V-A) — with bit-identical results; pass ``False`` for
+    the one-collective-per-neighbor lowering (A/B benchmarks).
     """
     gx, gy, gz = cfg.grid
     px, py, pz = cfg.points
@@ -180,7 +186,7 @@ def build_faces_program(cfg: FacesConfig, mesh,
     else:
         raise ValueError(cfg.granularity)
 
-    return q.build(name=name or f"faces_{cfg.granularity}")
+    return q.build(name=name or f"faces_{cfg.granularity}", coalesce=coalesce)
 
 
 def _emit_direct26(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
@@ -279,7 +285,8 @@ def global_residual_fn(cfg: FacesConfig, buf: str = "u"):
 
 def run_faces_until_converged(cfg: FacesConfig, mesh, u0, tol: float,
                               max_iters: int, mode: str = "dataflow",
-                              double_buffer: Optional[bool] = None):
+                              double_buffer: Optional[bool] = None,
+                              donate: bool = True):
     """Iterate Faces until the global residual drops below ``tol`` —
     with the *device* deciding when to stop (ONE host dispatch).
 
@@ -297,7 +304,7 @@ def run_faces_until_converged(cfg: FacesConfig, mesh, u0, tol: float,
     prog = build_faces_program(cfg, mesh).persistent(
         max_iters, until=lambda r: r >= tol)
     eng = PersistentEngine(prog, mode=mode, double_buffer=double_buffer,
-                           reduce_fn=global_residual_fn(cfg))
+                           reduce_fn=global_residual_fn(cfg), donate=donate)
     mem, residuals, n_done = eng(eng.init_buffers({"u": u0}))
     n_done = int(n_done)
     return mem, np.asarray(residuals)[:n_done], n_done, eng.stats
@@ -305,7 +312,8 @@ def run_faces_until_converged(cfg: FacesConfig, mesh, u0, tol: float,
 
 def run_faces_persistent(cfg: FacesConfig, mesh, u0, n_iters: int,
                          mode: str = "dataflow", reduce_fn=None,
-                         double_buffer: Optional[bool] = None):
+                         double_buffer: Optional[bool] = None,
+                         donate: bool = True):
     """Run ``n_iters`` Faces iterations as ONE host dispatch.
 
     Builds the inner-loop ST program, marks it persistent, and executes
@@ -323,7 +331,7 @@ def run_faces_persistent(cfg: FacesConfig, mesh, u0, n_iters: int,
 
     prog = build_faces_program(cfg, mesh).persistent(n_iters)
     eng = PersistentEngine(prog, mode=mode, reduce_fn=reduce_fn,
-                           double_buffer=double_buffer)
+                           double_buffer=double_buffer, donate=donate)
     out = eng(eng.init_buffers({"u": u0}))
     return out, eng.stats
 
@@ -362,7 +370,8 @@ def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
                         tols: Optional[Tuple[float, float]] = None,
                         max_iters: Optional[int] = None,
                         mode: str = "dataflow",
-                        double_buffer: Optional[bool] = None):
+                        double_buffer: Optional[bool] = None,
+                        donate: bool = True):
     """Two half-grid Faces queues, composed, iterated in ONE dispatch.
 
     The domain is split into two x-halves on the *same* mesh; each half
@@ -398,7 +407,8 @@ def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
         progs = [build_faces_program(cfgh, mesh, name=nm).persistent(n_iters)
                  for nm in (na, nb)]
         sched = compose(*progs)
-        eng = PersistentEngine(sched, mode=mode, double_buffer=double_buffer)
+        eng = PersistentEngine(sched, mode=mode, double_buffer=double_buffer,
+                               donate=donate)
         mem = eng(eng.init_buffers({f"{na}/u": ua, f"{nb}/u": ub}))
         return mem, eng.stats
 
@@ -413,7 +423,7 @@ def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
     ]
     sched = compose(*progs)
     eng = PersistentEngine(
-        sched, mode=mode, double_buffer=double_buffer,
+        sched, mode=mode, double_buffer=double_buffer, donate=donate,
         reduce_fns={nm: global_residual_fn(cfgh, buf=f"{nm}/u")
                     for nm in (na, nb)})
     mem, reds, n_done = eng(eng.init_buffers({f"{na}/u": ua, f"{nb}/u": ub}))

@@ -53,7 +53,7 @@ from .descriptors import (
     StartDesc,
     WaitDesc,
 )
-from .matching import Batch
+from .matching import Batch, coalesce_batch
 from .queue import STProgram
 
 
@@ -231,16 +231,24 @@ def compose(*programs: STProgram, name: Optional[str] = None) -> STSchedule:
             return new
 
         descs = [rn(d) for d in prog.descriptors]
+        mesh_shape = dict(mesh.shape)
         for b in prog.batches:
+            renamed_channels = [dataclasses.replace(
+                ch, src_buf=rename[ch.src_buf],
+                dst_buf=rename[ch.dst_buf]) for ch in b.channels]
+            # re-derive the coalescing plan over the renamed channels:
+            # batches are per-pid, so a plan can never merge channels
+            # across programs — each queue keeps its own fused transfers
+            plan = (coalesce_batch(renamed_channels, buffers, mesh_shape)
+                    if b.plan is not None else None)
             batches.append(Batch(
                 index=b.index + batch_lo,
                 kernels_before=[rn(k) for k in b.kernels_before],
-                channels=[dataclasses.replace(
-                    ch, src_buf=rename[ch.src_buf],
-                    dst_buf=rename[ch.dst_buf]) for ch in b.channels],
+                channels=renamed_channels,
                 colls=[rn(c) for c in b.colls],
                 waited=b.waited,
                 pid=pid,
+                plan=plan,
             ))
         subs.append(SubProgram(
             name=ns, pid=pid, buffers=tuple(rename.values()),

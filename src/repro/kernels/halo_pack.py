@@ -11,7 +11,22 @@ loop, so they get Pallas kernels:
 * ``pack_boundary_kernel``      — all 26 regions into ONE contiguous 1-D
                                   buffer (the paper's "contiguous MPI
                                   buffer"), static region offsets;
-* ``unpack_boundary_add_kernel``— scatter-add the contiguous buffer back.
+* ``unpack_boundary_add_kernel``— scatter-add the contiguous buffer back;
+* ``pack_segments_kernel``      — N *separate* source slabs into ONE
+                                  contiguous staging buffer at static
+                                  offsets: the same layout a
+                                  :class:`~repro.core.matching.CoalescedChannel`
+                                  fused transfer stages (members send
+                                  from distinct buffers).  The engines
+                                  currently lower that pack with
+                                  ``jnp.concatenate`` (which XLA:CPU
+                                  fuses best); this Pallas kernel is
+                                  the parity-tested TPU drop-in
+                                  (ROADMAP follow-on), not yet wired
+                                  into ``_run_coalesced_batch``;
+* ``unpack_segments_kernel``    — split the received staging buffer back
+                                  into the per-member slabs (inverse;
+                                  same status).
 
 TPU adaptation: a face slab of a local (px,py,pz) block is at most
 px·py ≲ 10⁴ elements — far below VMEM, so each kernel runs as a single
@@ -129,3 +144,77 @@ def unpack_boundary_add_call(u: jax.Array, buf: jax.Array,
         out_specs=pl.BlockSpec(u.shape, lambda: (0,) * u.ndim),
         interpret=interpret,
     )(u, buf)
+
+
+# --------------------------------------------------------------------------
+# multi-source segment pack / unpack (channel-coalescing staging buffers)
+# --------------------------------------------------------------------------
+
+
+def _pack_segments_body(*refs):
+    *in_refs, out_ref = refs
+    off = 0
+    for r in in_refs:  # static unroll over the group's members
+        size = int(np.prod(r.shape))
+        out_ref[pl.ds(off, size)] = r[...].reshape(-1)
+        off += size
+
+
+def pack_segments_call(arrays: Sequence[jax.Array], *,
+                       interpret: bool = False) -> jax.Array:
+    """Pack N source slabs into ONE contiguous 1-D staging buffer.
+
+    The coalescing analogue of :func:`pack_boundary_call`: member slabs
+    live in *separate* buffers (one per matched channel), and each lands
+    at a static offset — the layout recorded in the batch's
+    :class:`~repro.core.matching.CoalescePlan`.  All slabs must share a
+    dtype (the plan groups by dtype).
+
+    Status: the engines stage this layout with ``jnp.concatenate``
+    (see ``engine_fused._run_coalesced_batch``); this kernel is the
+    TPU drop-in for that pack, parity-tested but not yet wired in.
+    """
+    arrays = list(arrays)
+    if not arrays:
+        raise ValueError("pack_segments_call needs at least one slab")
+    dtype = arrays[0].dtype
+    if any(a.dtype != dtype for a in arrays):
+        raise ValueError("coalesced segments must share a dtype")
+    total = sum(int(np.prod(a.shape)) for a in arrays)
+    return pl.pallas_call(
+        _pack_segments_body,
+        out_shape=jax.ShapeDtypeStruct((total,), dtype),
+        in_specs=[pl.BlockSpec(a.shape, lambda _n=a.ndim: (0,) * _n)
+                  for a in arrays],
+        out_specs=pl.BlockSpec((total,), lambda: (0,)),
+        interpret=interpret,
+    )(*arrays)
+
+
+def _unpack_segments_body(buf_ref, *out_refs):
+    off = 0
+    for r in out_refs:  # static unroll
+        size = int(np.prod(r.shape))
+        r[...] = buf_ref[pl.ds(off, size)].reshape(r.shape)
+        off += size
+
+
+def unpack_segments_call(buf: jax.Array, shapes: Sequence[Tuple[int, ...]], *,
+                         interpret: bool = False) -> Tuple[jax.Array, ...]:
+    """Split a received staging buffer back into per-member slabs
+    (inverse of :func:`pack_segments_call`, static offsets)."""
+    shapes = [tuple(s) for s in shapes]
+    total = sum(int(np.prod(s)) for s in shapes)
+    if total != int(np.prod(buf.shape)):
+        raise ValueError(
+            f"segment shapes cover {total} elements, buffer has "
+            f"{int(np.prod(buf.shape))}")
+    outs = pl.pallas_call(
+        _unpack_segments_body,
+        out_shape=tuple(jax.ShapeDtypeStruct(s, buf.dtype) for s in shapes),
+        in_specs=[pl.BlockSpec(buf.shape, lambda: (0,))],
+        out_specs=tuple(pl.BlockSpec(s, lambda _n=len(s): (0,) * _n)
+                        for s in shapes),
+        interpret=interpret,
+    )(buf)
+    return outs if isinstance(outs, tuple) else (outs,)

@@ -1,0 +1,438 @@
+"""Channel coalescing — fused by-axis transfers (paper §V-A contiguous
+MPI buffer) must be a pure lowering optimization.
+
+Fast lane (single device): plan structure (26 → ≤6 collectives per
+start gate for direct26, recorded as :class:`CoalescedChannel`
+descriptors), bit-identical execution coalesced vs uncoalesced across
+modes/granularities/engines, a hypothesis property test over random
+channel sets, plan recomputation under composition (never merging
+channels across pids), buffer-donation semantics, and the Pallas
+segment pack/unpack kernels.
+
+Slow lane: the same bit-identity on a real 2×2×2 8-device grid where
+the fused transfers actually move data between shards (subprocess, like
+tests/test_distributed.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacesConfig,
+    FusedEngine,
+    HostEngine,
+    OffsetPeer,
+    GridOffsetPeer,
+    PersistentEngine,
+    STQueue,
+    build_faces_program,
+    compose,
+)
+from repro.core.halo import AXES3
+from repro.core.matching import CoalescePlan, coalesce_batch
+
+
+def _mesh111():
+    from repro.parallel import make_mesh
+    return make_mesh((1, 1, 1), AXES3)
+
+
+def _mesh11():
+    from repro.parallel import make_mesh
+    return make_mesh((1, 1), ("x", "y"))
+
+
+def _u0(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randn(*cfg.grid, *cfg.points).astype(np.float32)
+
+
+def _assert_mem_bitidentical(a, b, ctx=""):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"{ctx}: buffer {k!r}")
+
+
+# -- plan structure -----------------------------------------------------------
+
+
+class TestPlanStructure:
+    def test_direct26_plan_has_at_most_6_collectives_per_start(self):
+        """The acceptance contract: 26 messages/gate lower to ≤6 fused
+        by-axis transfers, asserted off the recorded plan."""
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        prog = build_faces_program(cfg, _mesh111())
+        for b in prog.batches:
+            assert isinstance(b.plan, CoalescePlan)
+            assert len(b.plan.transfers) <= 6
+        un, low = prog.max_collectives_per_start()
+        assert (un, low) == (26, 6)
+        assert prog.is_coalesced
+
+    def test_plan_members_partition_the_channels(self):
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        prog = build_faces_program(cfg, _mesh111())
+        (b,) = prog.batches
+        # final hops cover every channel exactly once
+        finals = [route[-1] for route in b.plan.routes]
+        assert len(finals) == len(b.channels) == 26
+        # each transfer's members reference valid channels, and every
+        # channel appears in at least one transfer (its first hop)
+        first_hops = {s.channel for t in b.plan.transfers
+                      for s in t.segments if s.hop == 0}
+        assert first_hops == set(range(26))
+        # segment offsets tile each staging buffer exactly
+        for t in b.plan.transfers:
+            off = 0
+            for s in t.segments:
+                assert s.offset == off
+                off += s.size
+            assert off == t.size
+
+    def test_staged3_plans_stay_by_axis(self):
+        """staged3 already sends by-axis faces: 2 transfers per gate
+        (one per direction — ppermute cannot merge opposite shifts)."""
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True,
+                          granularity="staged3")
+        prog = build_faces_program(cfg, _mesh111())
+        assert prog.n_batches == 3
+        for b in prog.batches:
+            assert len(b.plan.transfers) == 2
+        assert prog.max_collectives_per_start() == (2, 2)
+
+    def test_coalesce_false_records_no_plan(self):
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        prog = build_faces_program(cfg, _mesh111(), coalesce=False)
+        assert all(b.plan is None for b in prog.batches)
+        assert not prog.is_coalesced
+        assert prog.max_collectives_per_start() == (26, 26)
+
+    def test_build_cache_distinguishes_coalesce_flag(self):
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        mesh = _mesh111()
+        q = STQueue(mesh, name="c")
+        q.buffer("a", (4, 4), np.float32, pspec=("gx",))
+        q.buffer("b", (4, 4), np.float32, pspec=("gx",))
+        q.enqueue_recv("b", OffsetPeer("gx", -1, periodic=True), tag=0)
+        q.enqueue_send("a", OffsetPeer("gx", 1, periodic=True), tag=0)
+        q.enqueue_start()
+        q.enqueue_wait()
+        p1 = q.build()
+        p2 = q.build(coalesce=False)
+        assert p1.is_coalesced and not p2.is_coalesced
+        assert q.build() is not p2  # toggling back rebuilds, not stale
+
+    def test_dead_channels_are_pruned_from_transfers(self):
+        """A 1-D device grid kills 24 of the 26 directions (no pairs on
+        the collapsed axes): they must ride no transfer at all — the
+        fig10 regime, where coalescing must not add packing work."""
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=False)
+        prog = build_faces_program(cfg, _mesh111())
+        (b,) = prog.batches
+        # non-periodic size-1 axes: every direction is dead
+        assert len(b.plan.dead_channels) == 26
+        assert b.plan.transfers == ()
+        assert prog.max_collectives_per_start() == (26, 0)
+        # and execution still matches the uncoalesced interpreter
+        u0 = _u0(cfg)
+        on = FusedEngine(prog, mode="dataflow")
+        off = FusedEngine(prog, mode="dataflow", coalesce=False)
+        _assert_mem_bitidentical(on(on.init_buffers({"u": u0})),
+                                 off(off.init_buffers({"u": u0})),
+                                 ctx="dead-pruned")
+
+    def test_aliased_src_dst_batches_refuse_coalescing(self):
+        """A channel sending from a buffer another channel deposits into
+        must keep the sequential per-channel path (deposit visibility)."""
+        mesh = _mesh11()
+        q = STQueue(mesh, name="alias")
+        q.buffer("a", (4,), np.float32)
+        q.buffer("b", (4,), np.float32)
+        q.enqueue_recv("b", OffsetPeer("x", -1, periodic=True), tag=0)
+        q.enqueue_send("a", OffsetPeer("x", 1, periodic=True), tag=0)
+        # second channel sends from "b" — the first channel's dst
+        q.enqueue_recv("a", OffsetPeer("x", -1, periodic=True), tag=1)
+        q.enqueue_send("b", OffsetPeer("x", 1, periodic=True), tag=1)
+        q.enqueue_start()
+        q.enqueue_wait()
+        prog = q.build()
+        assert all(b.plan is None for b in prog.batches)
+
+
+# -- bit-identity: fused engine ----------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["stream", "dataflow"])
+@pytest.mark.parametrize("granularity", ["direct26", "staged3"])
+@pytest.mark.parametrize("batched", [True, False])
+def test_fused_coalesced_bitidentical_1dev(mode, granularity, batched):
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 3, 5), periodic=True,
+                      granularity=granularity, batched=batched)
+    prog = build_faces_program(cfg, _mesh111())
+    u0 = _u0(cfg)
+    on = FusedEngine(prog, mode=mode)
+    off = FusedEngine(prog, mode=mode, coalesce=False)
+    _assert_mem_bitidentical(on(on.init_buffers({"u": u0})),
+                             off(off.init_buffers({"u": u0})),
+                             ctx=f"{mode}/{granularity}")
+
+
+@pytest.mark.parametrize("mode", ["stream", "dataflow"])
+def test_persistent_coalesced_bitidentical_1dev(mode):
+    n = 4
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 3, 5), periodic=True)
+    prog = build_faces_program(cfg, _mesh111()).persistent(n)
+    u0 = _u0(cfg)
+    on = PersistentEngine(prog, mode=mode)
+    off = PersistentEngine(prog, mode=mode, coalesce=False)
+    _assert_mem_bitidentical(on(on.init_buffers({"u": u0})),
+                             off(off.init_buffers({"u": u0})),
+                             ctx=f"persistent/{mode}")
+    # and the device-resident loop still matches the host baseline
+    host = HostEngine(prog)
+    hmem = host.init_buffers({"u": u0})
+    for _ in range(n):
+        hmem = host(hmem)
+    out = on(on.init_buffers({"u": u0}))
+    np.testing.assert_allclose(np.asarray(out["u"]), np.asarray(hmem["u"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_composed_schedule_coalesced_bitidentical_and_per_pid():
+    """Composition re-derives plans per sub-program: transfers never mix
+    channels across pids, and execution stays bit-identical."""
+    cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+    mesh = _mesh111()
+    pa = build_faces_program(cfg, mesh, name="qa").persistent(2)
+    pb = build_faces_program(cfg, mesh, name="qb").persistent(3)
+    sched = compose(pa, pb)
+
+    for b in sched.batches:
+        assert b.plan is not None
+        # every member channel of every transfer belongs to THIS batch —
+        # and the batch belongs to exactly one pid
+        ns = {c.src_buf.split("/")[0] for c in b.plan.channels}
+        ns |= {c.dst_buf.split("/")[0] for c in b.plan.channels}
+        assert len(ns) == 1
+        for t in b.plan.transfers:
+            assert all(0 <= s.channel < len(b.plan.channels)
+                       for s in t.segments)
+
+    u0 = _u0(cfg)
+    ua, ub = u0, _u0(cfg, seed=1)
+    init = {"qa/u": ua, "qb/u": ub}
+    on = PersistentEngine(sched, mode="dataflow")
+    off = PersistentEngine(sched, mode="dataflow", coalesce=False)
+    # per-sub iteration counts diverge, so the engine returns the masked
+    # while_loop triple (mem, reduction traces, realized counts)
+    mem_on, _, nd_on = on(on.init_buffers(dict(init)))
+    mem_off, _, nd_off = off(off.init_buffers(dict(init)))
+    assert {k: int(v) for k, v in nd_on.items()} == \
+        {k: int(v) for k, v in nd_off.items()} == {"qa": 2, "qb": 3}
+    _assert_mem_bitidentical(mem_on, mem_off, ctx="composed")
+
+
+# -- property test: random channel sets ---------------------------------------
+
+
+def _run_random_program(channels, coalesce, mode):
+    """Build + run a queue whose batch holds ``channels`` specs."""
+    mesh = _mesh11()
+    q = STQueue(mesh, name="prop")
+    rng = np.random.RandomState(7)
+    init = {}
+    for i, (peer, tag, cmode, use_region) in enumerate(channels):
+        shape = (2, 3)
+        q.buffer(f"s{i}", shape, np.float32)
+        q.buffer(f"d{i}", shape, np.float32)
+        init[f"s{i}"] = rng.randn(*shape).astype(np.float32)
+        init[f"d{i}"] = rng.randn(*shape).astype(np.float32)
+    for i, (peer, tag, cmode, use_region) in enumerate(channels):
+        region = (slice(0, 1),) if use_region else None
+        q.enqueue_recv(f"d{i}", peer.inverse(), tag=tag, mode=cmode,
+                       region=region)
+    for i, (peer, tag, cmode, use_region) in enumerate(channels):
+        region = (slice(0, 1),) if use_region else None
+        q.enqueue_send(f"s{i}", peer, tag=tag, region=region)
+    q.enqueue_start()
+    q.enqueue_wait()
+    prog = q.build(coalesce=coalesce)
+    eng = FusedEngine(prog, mode=mode)
+    return prog, eng(eng.init_buffers(init))
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+
+    _peer_st = st.one_of(
+        st.builds(OffsetPeer,
+                  axis=st.sampled_from(["x", "y"]),
+                  delta=st.integers(-2, 2).filter(lambda d: d != 0),
+                  periodic=st.booleans()),
+        st.builds(lambda dx, dy, p: GridOffsetPeer(("x", "y"), (dx, dy), p),
+                  st.integers(-1, 1), st.integers(-1, 1),
+                  st.booleans()).filter(lambda g: any(g.deltas)),
+    )
+    _channel_st = st.tuples(_peer_st, st.integers(0, 3),
+                            st.sampled_from(["replace", "add"]),
+                            st.booleans())
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(_channel_st, min_size=1, max_size=8),
+           st.sampled_from(["stream", "dataflow"]))
+    def test_any_coalescing_partition_is_bitidentical(channels, mode):
+        """Whatever (axis, perm) grouping the plan derives, running it
+        must reproduce the uncoalesced interpreter bit-for-bit, in both
+        ordering modes — replace masks, add-order and regions included."""
+        # tag each channel uniquely per peer-key is not required: FIFO
+        # matching pairs them positionally, exactly like the engines
+        prog_c, mem_c = _run_random_program(channels, True, mode)
+        prog_u, mem_u = _run_random_program(channels, False, mode)
+        (b,) = prog_c.batches
+        if b.plan is not None:
+            assert len(b.plan.transfers) <= len(b.channels)
+        _assert_mem_bitidentical(mem_c, mem_u, ctx=mode)
+
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_any_coalescing_partition_is_bitidentical():
+        pass
+
+
+# -- donation -----------------------------------------------------------------
+
+
+class TestDonation:
+    def _prog(self):
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        return cfg, build_faces_program(cfg, _mesh111())
+
+    def test_donated_call_does_not_retain_input(self):
+        """FusedEngine(donate=True) must actually consume its inputs —
+        the zero-copy contract (regression: donate was dead in practice)."""
+        cfg, prog = self._prog()
+        eng = FusedEngine(prog, mode="dataflow", donate=True)
+        mem = eng.init_buffers({"u": _u0(cfg)})
+        held = mem["u"]
+        out = eng(mem)
+        assert held.is_deleted()
+        assert not out["u"].is_deleted()
+
+    def test_undonated_call_retains_input(self):
+        cfg, prog = self._prog()
+        eng = FusedEngine(prog, mode="dataflow")
+        mem = eng.init_buffers({"u": _u0(cfg)})
+        held = mem["u"]
+        eng(mem)
+        assert not held.is_deleted()
+
+    def test_persistent_donated_loop(self):
+        cfg, prog = self._prog()
+        eng = PersistentEngine(prog.persistent(3), mode="dataflow",
+                               donate=True)
+        mem = eng.init_buffers({"u": _u0(cfg)})
+        held = mem["u"]
+        out = eng(mem)
+        assert held.is_deleted()
+        # donated run computes the same field as an undonated one
+        ref = PersistentEngine(prog.persistent(3), mode="dataflow")
+        out2 = ref(ref.init_buffers({"u": _u0(cfg)}))
+        np.testing.assert_array_equal(np.asarray(out["u"]),
+                                      np.asarray(out2["u"]))
+
+    def test_run_faces_persistent_entrypoint_donates(self):
+        from repro.core.halo import run_faces_persistent
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        mem, stats = run_faces_persistent(cfg, _mesh111(), _u0(cfg), 2)
+        assert stats.dispatches == 1  # donation didn't change accounting
+
+
+# -- Pallas segment kernels ---------------------------------------------------
+
+
+class TestSegmentKernels:
+    def test_pack_segments_matches_concat(self):
+        from repro.kernels.halo_pack import pack_segments_call
+        rng = np.random.RandomState(0)
+        slabs = [rng.randn(*s).astype(np.float32)
+                 for s in [(2, 3), (1, 4), (5,)]]
+        got = pack_segments_call(slabs, interpret=True)
+        ref = np.concatenate([s.reshape(-1) for s in slabs])
+        np.testing.assert_array_equal(np.asarray(got), ref)
+
+    def test_unpack_segments_roundtrip(self):
+        from repro.kernels.halo_pack import (pack_segments_call,
+                                             unpack_segments_call)
+        rng = np.random.RandomState(1)
+        shapes = [(2, 2), (3,), (1, 1, 4)]
+        slabs = [rng.randn(*s).astype(np.float32) for s in shapes]
+        buf = pack_segments_call(slabs, interpret=True)
+        outs = unpack_segments_call(buf, shapes, interpret=True)
+        for o, s in zip(outs, slabs):
+            np.testing.assert_array_equal(np.asarray(o), s)
+
+    def test_mismatched_dtype_rejected(self):
+        from repro.kernels.halo_pack import pack_segments_call
+        with pytest.raises(ValueError, match="dtype"):
+            pack_segments_call([np.zeros((2,), np.float32),
+                                np.zeros((2,), np.float64)], interpret=True)
+
+    def test_bad_segment_cover_rejected(self):
+        from repro.kernels.halo_pack import unpack_segments_call
+        with pytest.raises(ValueError, match="elements"):
+            unpack_segments_call(np.zeros((5,), np.float32), [(2,), (2,)],
+                                 interpret=True)
+
+
+# -- multi-device (subprocess, slow lane) -------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("granularity", ["direct26", "staged3"])
+def test_coalesced_bitidentical_8dev(subproc, granularity):
+    r = subproc(f"""
+import numpy as np
+from repro.core import (FacesConfig, FusedEngine, PersistentEngine,
+                        build_faces_program, faces_oracle)
+from repro.parallel import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("gx", "gy", "gz"))
+cfg = FacesConfig(grid=(2, 2, 2), points=(4, 4, 4),
+                  granularity={granularity!r})
+prog = build_faces_program(cfg, mesh)
+if cfg.granularity == "direct26":
+    assert prog.max_collectives_per_start() == (26, 6), \\
+        prog.max_collectives_per_start()
+u0 = np.random.RandomState(0).randn(2, 2, 2, 4, 4, 4).astype(np.float32)
+
+for mode in ("stream", "dataflow"):
+    on = FusedEngine(prog, mode=mode)
+    off = FusedEngine(prog, mode=mode, coalesce=False)
+    mc = on(on.init_buffers({{"u": u0}}))
+    mu = off(off.init_buffers({{"u": u0}}))
+    for k in mc:
+        np.testing.assert_array_equal(np.asarray(mc[k]), np.asarray(mu[k]))
+
+pp = prog.persistent(3)
+on = PersistentEngine(pp, mode="dataflow", donate=True)
+off = PersistentEngine(pp, mode="dataflow", coalesce=False)
+mc = on(on.init_buffers({{"u": u0}}))
+mu = off(off.init_buffers({{"u": u0}}))
+for k in mc:
+    np.testing.assert_array_equal(np.asarray(mc[k]), np.asarray(mu[k]))
+if cfg.granularity == "direct26":
+    ref = u0
+    for _ in range(3):
+        ref = faces_oracle(ref, cfg)
+    np.testing.assert_allclose(np.asarray(mc["u"]), ref, rtol=1e-4, atol=1e-4)
+print("coalesce 8dev OK")
+""")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "coalesce 8dev OK" in r.stdout

@@ -334,18 +334,24 @@ def fig_convergence(tols=(1e-1, 1e-2, 1e-3), max_iters=None):
 
 def fig_pipeline(inner=None, repeats=5):
     """Pipelined multi-queue: 2 composed half-grid queues, 1 dispatch,
-    vs the same two persistent programs dispatched sequentially (2)."""
+    vs the same two persistent programs dispatched sequentially (2) —
+    plus the LINKED N-way rows: cross-program channels make the
+    composed parts exchange their shared faces, so the composed run is
+    the TRUE full-domain solve (verified against the single-queue
+    full-domain run) while still costing one dispatch."""
     import jax
     from repro.core import (
-        FacesConfig, PersistentEngine, build_faces_program, compose,
-        half_config, split_halves,
+        FacesConfig, PersistentEngine, build_faces_program,
+        build_faces_part_program, compose, half_config, merge_parts,
+        part_names, split_halves, split_parts,
     )
     from repro.parallel import make_mesh
 
     inner = inner or _cfg_env("FACES_INNER", 10)
     grid, points = (2, 2, 2), (12, 12, 12)
     mesh = make_mesh(grid, ("gx", "gy", "gz"))
-    cfgh = half_config(FacesConfig(grid=grid, points=points))
+    cfg = FacesConfig(grid=grid, points=points)
+    cfgh = half_config(cfg)
     rng = np.random.RandomState(0)
     u0 = rng.randn(*grid, *points).astype(np.float32)
     ua, ub = split_halves(u0)
@@ -371,7 +377,8 @@ def fig_pipeline(inner=None, repeats=5):
            "min_s": float(np.min(times))}
     seq_disp = (engA.stats.dispatches + engB.stats.dispatches) // repeats
 
-    # composed: ONE dispatch, B's compute interleaves A's comm windows
+    # composed (unlinked): ONE dispatch, B's compute interleaves A's
+    # comm windows, each half still an independent solve
     sched = compose(progA, progB)
     engC = PersistentEngine(sched, mode="dataflow", donate=True)
     freshC = lambda: engC.init_buffers({"facesA/u": ua, "facesB/u": ub})
@@ -386,22 +393,63 @@ def fig_pipeline(inner=None, repeats=5):
     comp_disp = engC.stats.dispatches // repeats
     assert (seq_disp, comp_disp) == (2, 1), (seq_disp, comp_disp)
 
+    # full-domain reference: ONE queue over the unsplit block (what the
+    # linked rows must reproduce bit-for-bit modulo the documented
+    # coalesced-dataflow FMA ULPs)
+    fprog = build_faces_program(cfg, mesh).persistent(inner)
+    engF = PersistentEngine(fprog, mode="dataflow", donate=True)
+    freshF = lambda: engF.init_buffers({"u": u0})
+    full_out = engF(freshF())
+    full_u = np.asarray(full_out["u"])
+    engF.stats.reset()
+    full = _time_engine(engF, None, 1, repeats, fresh=freshF)
+    full_disp = engF.stats.dispatches // repeats
+
+    # linked N-way: cross-program channels carry the shared faces (and
+    # the stencil's ghost planes), one dispatch for the REAL solve
+    rows = [("sequential_2q", seq, seq_disp),
+            ("composed_1q", comp, comp_disp),
+            ("full_domain_1q", full, full_disp)]
+    for n_parts in (2, 4):
+        names = part_names(n_parts)
+        progs = [build_faces_part_program(cfg, mesh, k, n_parts,
+                                          names=names).persistent(inner)
+                 for k in range(n_parts)]
+        engL = PersistentEngine(compose(*progs), mode="dataflow",
+                                donate=True)
+        parts = split_parts(u0, n_parts)
+        freshL = lambda e=engL, p=parts, nm=names: e.init_buffers(
+            {f"{n}/u": x for n, x in zip(nm, p)})
+        warmL = engL(freshL())
+        got = np.asarray(merge_parts([warmL[f"{n}/u"] for n in names]))
+        np.testing.assert_allclose(got, full_u, rtol=1e-5, atol=1e-6)
+        engL.stats.reset()
+        linked = _time_engine(engL, None, 1, repeats, fresh=freshL)
+        linked_disp = engL.stats.dispatches // repeats
+        assert linked_disp == 1, linked_disp
+        rows.append((f"linked_1q_n{n_parts}", linked, linked_disp))
+
     speedup = seq["avg_s"] / comp["avg_s"] if comp["avg_s"] else float("nan")
-    for name, r, disp in (("sequential_2q", seq, seq_disp),
-                          ("composed_1q", comp, comp_disp)):
+    linked2 = next(r for n, r, _ in rows if n == "linked_1q_n2")
+    linked_speedup = (full["avg_s"] / linked2["avg_s"]
+                      if linked2["avg_s"] else float("nan"))
+    for name, r, disp in rows:
         RESULTS.append({
             "bench": "faces_pipeline", "variant": name,
             "us_per_call": r["avg_s"] * 1e6,
             "median_ms": r["med_s"] * 1e3,
             "dispatches": disp,
             "derived": f"dispatches_per_loop={disp};"
-                       f"overlap_speedup={speedup:.3f}",
+                       f"overlap_speedup={speedup:.3f};"
+                       f"linked_vs_full={linked_speedup:.3f}",
         })
-        print(f"  pipe   {name:14s} avg={r['avg_s']*1e3:9.2f}ms "
+        print(f"  pipe   {name:15s} avg={r['avg_s']*1e3:9.2f}ms "
               f"med={r['med_s']*1e3:9.2f}ms dispatch/loop={disp}")
     print(f"  overlap speedup (sequential/composed): {speedup:.3f}x "
-          f"({inner} iterations, 2 half-grid queues)")
-    return {"sequential_2q": seq, "composed_1q": comp, "speedup": speedup}
+          f"({inner} iterations, 2 half-grid queues); linked full-domain "
+          f"solve vs single queue: {linked_speedup:.3f}x")
+    return {"sequential_2q": seq, "composed_1q": comp, "full_domain_1q": full,
+            "speedup": speedup, "linked_vs_full": linked_speedup}
 
 
 def run_all():

@@ -58,13 +58,22 @@ def check_against(faces: dict, path: str) -> int:
     # per-variant median comparison is only meaningful when this run
     # used the same loop settings the file was recorded with (a smaller
     # FACES_INNER rescales host-dispatch-bound and fused variants
-    # differently); otherwise only the absolute invariants below apply
+    # differently); otherwise only the absolute invariants below apply.
+    # A file WITHOUT a _meta stamp never gets median-compared either —
+    # its loop settings are unknown, so a stale file could fail CI
+    # spuriously (or pass wrongly) at arbitrary mismatched settings.
     stored_meta = stored.get("_meta", {})
     fresh_meta = faces.get("_meta", {})
-    compare_medians = (stored_meta == fresh_meta) or not stored_meta
-    if not compare_medians:
+    if not stored_meta:
+        compare_medians = False
+        print("note: recorded file has no _meta settings stamp — median "
+              "checks skipped (invariants only); re-record it to enable them")
+    elif stored_meta != fresh_meta:
+        compare_medians = False
         print(f"note: settings differ from recorded ({fresh_meta} vs "
               f"{stored_meta}) — median checks skipped, invariants enforced")
+    else:
+        compare_medians = True
 
     def tracked(key):
         f, s = faces.get(key), stored.get(key)

@@ -9,7 +9,9 @@ iteration count and the residual trace read back afterwards.
 ``--pipeline`` smokes the multi-queue schedule: two half-grid Faces
 queues composed (`repro.core.schedule.compose`) into ONE dispatch,
 fixed-count and per-program-predicate variants, checked against
-independent per-queue runs."""
+independent per-queue runs — plus the LINKED composition
+(exchange=True cross-program channels), checked bit-for-bit against
+the single-queue full-domain run."""
 import argparse
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -89,11 +91,12 @@ if args.converge:
     print("CONVERGENCE SMOKE PASS")
 
 if args.pipeline:
-    # two half-grid queues composed: ONE dispatch, results matching the
-    # two independent persistent runs (2 dispatches)
+    # two half-grid queues composed (UNLINKED): ONE dispatch, results
+    # matching the two independent persistent runs (2 dispatches)
     pcfg = FacesConfig(grid=(2, 2, 2), points=(6, 4, 4), damping=0.12)
     pu0 = rng.randn(2, 2, 2, 6, 4, 4).astype(np.float32)
-    pmem, pstats = run_faces_pipelined(pcfg, mesh, pu0, n_iters=N)
+    pmem, pstats = run_faces_pipelined(pcfg, mesh, pu0, n_iters=N,
+                                       exchange=False)
     assert pstats.dispatches == 1 and pstats.sync_points == 0
     cfgh = half_config(pcfg)
     ind_disp = 0
@@ -109,7 +112,7 @@ if args.pipeline:
     # per-program predicates: each half converges to its OWN tolerance
     tols = (1e-1, 1e-2)
     pmem, reds, n_done, pstats = run_faces_pipelined(
-        pcfg, mesh, pu0, tols=tols, max_iters=40)
+        pcfg, mesh, pu0, tols=tols, max_iters=40, exchange=False)
     assert pstats.dispatches == 1
     for nm, uh, tol in zip(("facesA", "facesB"), split_halves(pu0), tols):
         im, ir, inn, _ = run_faces_until_converged(cfgh, mesh, uh, tol=tol,
@@ -119,6 +122,22 @@ if args.pipeline:
                                    np.asarray(im["u"]),
                                    rtol=1e-6, atol=1e-7)
     print(f"pipelined[until] OK n_done={n_done} dispatches=1")
+
+    # LINKED composition (default): cross-program channels exchange the
+    # shared faces + ghost planes, so the composed run IS the
+    # full-domain solve — bit-identical in stream mode, one dispatch
+    from repro.core import merge_parts, part_names
+    full, _ = run_faces_persistent(pcfg, mesh, pu0, n_iters=N,
+                                   mode="stream")
+    for n_parts in (2, 3):
+        names = part_names(n_parts)
+        lmem, lstats = run_faces_pipelined(pcfg, mesh, pu0, n_iters=N,
+                                           n_parts=n_parts, mode="stream")
+        assert lstats.dispatches == 1
+        got = np.asarray(merge_parts([lmem[f"{nm}/u"] for nm in names]))
+        np.testing.assert_array_equal(got, np.asarray(full["u"]))
+        print(f"pipelined[linked n={n_parts}] OK bit-identical to "
+              f"full-domain, dispatches=1")
     print("PIPELINE SMOKE PASS")
 
 print("PERSISTENT SMOKE PASS")

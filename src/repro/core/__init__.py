@@ -47,15 +47,21 @@ from .halo import (
     EDGES,
     FACES,
     FacesConfig,
+    build_faces_part_program,
     build_faces_program,
     faces_oracle,
     global_residual_fn,
     half_config,
     merge_halves,
+    merge_parts,
+    part_configs,
+    part_names,
+    part_points,
     run_faces_persistent,
     run_faces_pipelined,
     run_faces_until_converged,
     split_halves,
+    split_parts,
 )
 from .matching import (
     Batch,
@@ -67,11 +73,11 @@ from .matching import (
     match_batch,
 )
 from .queue import QueueError, STProgram, STQueue, create_queue
-from .schedule import ScheduleError, STSchedule, SubProgram, compose
+from .schedule import Link, ScheduleError, STSchedule, SubProgram, compose
 
 __all__ = [
     "STQueue", "STProgram", "create_queue", "QueueError",
-    "STSchedule", "SubProgram", "compose", "ScheduleError",
+    "STSchedule", "SubProgram", "compose", "ScheduleError", "Link",
     "FusedEngine", "HostEngine", "HostStats", "PersistentEngine",
     "OffsetPeer", "GridOffsetPeer", "PairListPeer",
     "SendDesc", "RecvDesc", "CollDesc", "KernelDesc", "StartDesc", "WaitDesc",
@@ -79,9 +85,12 @@ __all__ = [
     "CoalescedChannel", "CoalescePlan", "coalesce_batch",
     "TriggerCounter", "CompletionCounter", "fresh_token", "bump", "tie",
     "gate", "completion_from",
-    "FacesConfig", "build_faces_program", "faces_oracle",
+    "FacesConfig", "build_faces_program", "build_faces_part_program",
+    "faces_oracle",
     "run_faces_persistent", "run_faces_until_converged",
     "run_faces_pipelined", "half_config", "split_halves", "merge_halves",
+    "part_configs", "part_names", "part_points", "split_parts",
+    "merge_parts",
     "global_residual_fn",
     "DIRECTIONS", "FACES", "EDGES", "CORNERS",
 ]

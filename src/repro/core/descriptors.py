@@ -44,6 +44,20 @@ throughout; :func:`repro.core.schedule.compose` assigns each fused
 sub-program its own pid so the engines can keep **per-program
 trigger/completion counter banks** — the multi-DWQ analogue of one
 counter pair per ``MPIX_Queue``.
+
+Cross-program channels (``remote``)
+-----------------------------------
+``SendDesc``/``RecvDesc`` additionally carry an optional ``remote``
+field naming the *peer program* the descriptor pairs with.  A remote
+send's matching receive lives in another queue's program (and vice
+versa): the queue's own build leaves such descriptors *open*, and
+:func:`repro.core.schedule.compose` matches them across the composed
+programs into channels whose deposit lands in the peer program's
+memory — with the trigger taken from the sender's counter bank and the
+completion wired into the *receiver's* bank, so the receiver's wait
+gate observes the sender's completion.  This is how concurrent queues
+chain triggered operations across streams (the halo exchange *between*
+composed domain parts) instead of merely interleaving independently.
 """
 
 from __future__ import annotations
@@ -208,6 +222,9 @@ class SendDesc:
     # Optional slice of the buffer to send: tuple of slice objects.
     region: Optional[Tuple[slice, ...]] = None
     pid: int = 0
+    # Cross-program channel: name of the peer *program* holding the
+    # matching receive (None = matched within this program's own batch).
+    remote: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -221,6 +238,9 @@ class RecvDesc:
     # ("add" is the Faces gather-scatter sum deposit).
     mode: str = "replace"
     pid: int = 0
+    # Cross-program channel: name of the peer *program* holding the
+    # matching send (None = matched within this program's own batch).
+    remote: Optional[str] = None
 
 
 @dataclasses.dataclass

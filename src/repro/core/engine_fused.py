@@ -98,6 +98,7 @@ class FusedEngine:
     ):
         if mode not in ("stream", "dataflow"):
             raise ValueError("mode must be 'stream' or 'dataflow'")
+        program.require_closed()
         self.program = program
         self.mode = mode
         self.donate = donate
@@ -233,9 +234,13 @@ def _interpret_program(
     tokens = dict(tokens)
     comp_tokens = dict(comp_tokens)
     batches_by_index = {b.index: b for b in prog.batches}
-    # buffers each batch received into (for dataflow-mode waits)
+    # buffers each batch received into (for dataflow-mode waits): a
+    # cross-program channel's deposit is gated by the RECEIVING batch's
+    # wait (cross_recv_bufs), not by the triggering batch's own wait
     recv_bufs_by_batch: Dict[int, List[str]] = {
-        b.index: [c.dst_buf for c in b.channels] + [c.out for c in b.colls]
+        b.index: [c.dst_buf for c in b.channels
+                  if c.dst_pid is None or c.dst_pid == b.pid]
+        + [c.out for c in b.colls] + list(b.cross_recv_bufs)
         for b in prog.batches
     }
     send_bufs_by_batch: Dict[int, List[str]] = {
@@ -283,21 +288,42 @@ def _interpret_program(
             # pack already depends on every source slab, so tying the
             # whole live set would just re-materialize untouched buffers
             tokens[pid] = counters.bump(tokens[pid])
-            # fire every descriptor in the batch (threshold reached)
-            results = []
+            # fire every descriptor in the batch (threshold reached).
+            # Completion is banked per DESTINATION program: a
+            # cross-program channel bumps the receiver's completion
+            # counter, so the receiver's wait gate observes this
+            # sender's completion (trigger stays on the sender's bank).
+            results_by_pid: Dict[int, List[Any]] = {}
             if use_plan:
-                mem, rs = _run_coalesced_batch(mem, batch.plan, tokens[pid],
-                                               mesh_shape)
-                results.extend(rs)
+                plan = batch.plan
+                mem, received = _run_coalesced_batch(mem, plan, tokens[pid],
+                                                     mesh_shape)
+                # a fused transfer feeds the completion counter of every
+                # program it carries a final segment for (the deposited
+                # slabs are slices of the payload, so gating on the
+                # payload gates the deposits — and an all-domestic batch
+                # keeps the exact PR-4 graph: one barrier, all payloads)
+                pid_transfers: Dict[int, List[int]] = {}
+                for ci, ch in enumerate(plan.channels):
+                    if not plan.routes[ci]:
+                        continue  # statically dead: deposits zeros only
+                    dpid = pid if ch.dst_pid is None else ch.dst_pid
+                    ti = plan.routes[ci][-1][0]
+                    pid_transfers.setdefault(dpid, []).append(ti)
+                for dpid, tis in pid_transfers.items():
+                    results_by_pid[dpid] = [received[ti]
+                                            for ti in sorted(set(tis))]
             else:
                 for ch in batch.channels:
                     mem, r = _run_channel(mem, ch, tokens[pid], mesh_shape)
-                    results.append(r)
+                    dpid = pid if ch.dst_pid is None else ch.dst_pid
+                    results_by_pid.setdefault(dpid, []).append(r)
             for coll in batch.colls:
                 mem, r = _run_collective(mem, coll, tokens[pid], prog)
-                results.append(r)
-            comp_tokens[pid] = counters.completion_from(
-                comp_tokens[pid], *results)
+                results_by_pid.setdefault(pid, []).append(r)
+            for dpid, rs in results_by_pid.items():
+                comp_tokens[dpid] = counters.completion_from(
+                    comp_tokens[dpid], *rs)
 
         elif isinstance(d, WaitDesc):
             # waitValue: gate this program's stream on its completion
@@ -377,6 +403,11 @@ def _run_coalesced_batch(mem, plan, token, mesh_shape):
     source rank exists, each channel's final segment is bit-identical
     to its direct multi-axis ppermute; deposits then replay in original
     channel order.
+
+    Returns ``(mem, received)`` with one payload per fused transfer;
+    the caller banks each destination program's completion on the
+    transfers that carry its final segments (see the StartDesc
+    handling in :func:`_interpret_program`).
     """
     received = []
     for t in plan.transfers:

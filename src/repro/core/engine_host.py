@@ -59,6 +59,7 @@ class HostEngine:
     def __init__(self, program: STProgram, sync: str = "every_op"):
         if sync not in ("every_op", "batch"):
             raise ValueError("sync must be 'every_op' or 'batch'")
+        program.require_closed()
         self.program = program
         self.sync = sync
         self.mesh = program.mesh

@@ -89,6 +89,16 @@ the full (namespaced) buffer dict but must only read its own program's
 buffers — a frozen program's buffers hold their converged values, but
 cross-program reads would still observe in-flight state.
 
+Schedules with **cross-program channels** (``compose(..., links=...)``)
+run here unchanged: the interpreter banks each deposit's completion on
+the *receiving* program's counter, and the masked loop composes with
+links naturally — when a link's peer has already converged (inactive),
+its descriptors still execute each pass, so its packs keep publishing
+its FROZEN boundary to the still-active neighbors (deposits into the
+frozen program's own buffers are discarded by its mask).  Linked
+neighbors therefore see a converged part as a constant boundary
+condition, not stale in-flight data.
+
 Dispatch accounting
 -------------------
 ``stats`` is a :class:`~repro.core.engine_host.HostStats`: one call =

@@ -30,10 +30,19 @@ paths: per-op host dispatch (:mod:`.engine_host`), one dispatch per
 iteration (:mod:`.engine_fused`), and — via
 :func:`run_faces_persistent` / :mod:`.engine_persistent` — one dispatch
 for the whole N-iteration loop, device-resident.  On top of that,
-:func:`run_faces_pipelined` splits the domain into two half-grids on
-the same mesh, gives each its own queue, and composes the two
-persistent loops (:mod:`.schedule`) so they interleave in ONE dispatch
-— each half may even terminate on its own convergence predicate.
+:func:`run_faces_pipelined` splits the domain into N x-parts (uneven
+sizes OK) on the same mesh, gives each its own queue, and composes the
+persistent loops (:mod:`.schedule`) so they interleave in ONE dispatch.
+By default the parts are *linked* through cross-program channels
+(:func:`build_faces_part_program`): every iteration they exchange their
+shared interior faces and the stencil's ghost planes, so the composed
+run is the TRUE full-domain solve — bit-identical to the single-queue
+:func:`run_faces_persistent` in ``stream`` mode (and in uncoalesced
+``dataflow``; the default dataflow+coalesce path agrees to a few
+documented FMA-contraction ULPs — see tests/test_links.py) — while one
+part's communication window still overlaps another's compute.  With
+``exchange=False`` the parts iterate independently (each may terminate
+on its own convergence predicate).
 
 A pure-NumPy oracle (`faces_oracle`) computes the same update globally
 for correctness tests.
@@ -190,6 +199,11 @@ def build_faces_program(cfg: FacesConfig, mesh,
 
 
 def _emit_direct26(q: STQueue, cfg: FacesConfig, msg_in, msg_out):
+    # NOTE: build_faces_part_program emits the same structure filtered
+    # by direction ownership; the two must stay in lockstep (tag scheme,
+    # recvs-before-sends order, global-direction unpack replay) for the
+    # linked split's bit-identity with the full-domain run — enforced by
+    # tests/test_links.py::test_linked_pipelined_bitmatches_full_domain.
     dirs = DIRECTIONS
     # 2. pack kernels (paper step 2; packs precede sends in stream order)
     for i, d in enumerate(dirs):
@@ -337,96 +351,333 @@ def run_faces_persistent(cfg: FacesConfig, mesh, u0, n_iters: int,
 
 
 # --------------------------------------------------------------------------
-# pipelined multi-queue loop (two half-grids, one dispatch)
+# pipelined multi-queue loop (N x-split domain parts, one dispatch)
 # --------------------------------------------------------------------------
 
 
-def half_config(cfg: FacesConfig) -> FacesConfig:
-    """The per-half FacesConfig of an x-split domain (same device grid)."""
+def part_points(px: int, n: int) -> Tuple[int, ...]:
+    """Sizes of an N-way (possibly uneven) split of ``px`` points.
+
+    The first ``px % n`` parts take one extra plane (``numpy.array_split``
+    convention), so odd-sized domains pipeline instead of erroring.
+    """
+    if not 1 <= n <= px:
+        raise ValueError(
+            f"cannot split {px} x-planes into {n} part(s): need "
+            f"1 <= n_parts <= points[0]")
+    base, extra = divmod(px, n)
+    return tuple(base + (1 if k < extra else 0) for k in range(n))
+
+
+def part_configs(cfg: FacesConfig, n: int) -> Tuple[FacesConfig, ...]:
+    """Per-part FacesConfigs of an N-way x-split domain (same device
+    grid); parts may be uneven — see :func:`part_points`."""
     px, py, pz = cfg.points
-    if px % 2:
-        raise ValueError(f"points[0]={px} must be even to split the domain")
-    return dataclasses.replace(cfg, points=(px // 2, py, pz))
+    return tuple(dataclasses.replace(cfg, points=(p, py, pz))
+                 for p in part_points(px, n))
+
+
+def split_parts(u0, n: int):
+    """Split a (gx,gy,gz,px,py,pz) field into N x-parts (uneven OK)."""
+    u0 = np.asarray(u0)
+    sizes = part_points(u0.shape[3], n)
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    return [u0[:, :, :, offs[k]:offs[k + 1]] for k in range(n)]
+
+
+def merge_parts(parts):
+    """Inverse of :func:`split_parts`."""
+    return jnp.concatenate([jnp.asarray(p) for p in parts], axis=3)
+
+
+def half_config(cfg: FacesConfig, part: int = 0) -> FacesConfig:
+    """The per-half FacesConfig of a 2-way x-split domain.
+
+    For even ``points[0]`` both halves are identical; for odd sizes the
+    halves are uneven (first half takes the extra plane) and ``part``
+    selects which one — see :func:`part_configs` for the N-way form.
+    """
+    return part_configs(cfg, 2)[part]
 
 
 def split_halves(u0):
-    """Split a (gx,gy,gz,px,py,pz) field into two x-halves."""
-    px = u0.shape[3]
-    if px % 2:
-        raise ValueError(f"points[0]={px} must be even to split the domain")
-    return u0[:, :, :, : px // 2], u0[:, :, :, px // 2:]
+    """Split a (gx,gy,gz,px,py,pz) field into two x-halves (uneven OK)."""
+    return tuple(split_parts(u0, 2))
 
 
 def merge_halves(ua, ub):
     """Inverse of :func:`split_halves`."""
-    return jnp.concatenate([jnp.asarray(ua), jnp.asarray(ub)], axis=3)
+    return merge_parts([ua, ub])
 
 
 PIPELINE_NAMES = ("facesA", "facesB")
 
 
+def part_names(n: int) -> Tuple[str, ...]:
+    """Program names of an N-way split (2-way keeps the legacy pair)."""
+    if n == 2:
+        return PIPELINE_NAMES
+    return tuple(f"faces{k}" for k in range(n))
+
+
+# Ghost-plane exchange tags (cross-program, peer offset (0,0,0)):
+# _GHOST_TAG_LO carries part k's LAST plane up into part k+1's "glo"
+# slot; _GHOST_TAG_HI carries part k's FIRST plane down into part
+# k-1's "ghi" slot (ring over the parts, matching the full block's
+# local wrap-around stencil).
+_GHOST_TAG_LO, _GHOST_TAG_HI = 0, 1
+
+
+def _part_interior_fn(u, glo, ghi):
+    """Step-4 overlap stencil of one x-part, ghost planes substituted.
+
+    Bit-identical to :func:`_interior_fn` on the unsplit block: the
+    x-rolls become concat-with-ghost shifts (pure copies — the
+    neighbor-part planes exchanged this iteration), and the elementwise
+    addition order is kept exactly, so every float op matches the
+    full-domain kernel's.
+    """
+    core = u[0, 0, 0]
+    lo = glo[0, 0, 0]   # last plane of the part below (ring)
+    hi = ghi[0, 0, 0]   # first plane of the part above (ring)
+    xm = jnp.concatenate([lo, core[:-1]], axis=0)   # == roll(full, +1, 0)
+    xp = jnp.concatenate([core[1:], hi], axis=0)    # == roll(full, -1, 0)
+    smoothed = core + 0.125 * (
+        xm + xp
+        + jnp.roll(core, 1, 1) + jnp.roll(core, -1, 1)
+        + jnp.roll(core, 1, 2) + jnp.roll(core, -1, 2)
+        - 6.0 * core
+    )
+    return smoothed[None, None, None]
+
+
+def build_faces_part_program(cfg: FacesConfig, mesh, part: int, n_parts: int,
+                             names: Optional[Tuple[str, ...]] = None,
+                             coalesce: bool = True) -> STProgram:
+    """Build part ``part`` of an N-way x-split Faces domain, with
+    cross-program links so the composed parts reproduce the FULL-domain
+    iteration bit for bit (``cfg`` is the *full* domain's config).
+
+    Two kinds of links (all declared via ``remote=`` and resolved by
+    :func:`repro.core.schedule.compose`):
+
+    * **ghost planes** — each part's interior stencil reads its ring
+      neighbors' boundary planes (the full block's local wrap), fetched
+      pre-iteration in a dedicated start/wait batch;
+    * **x-crossing halo messages** — the 18 directions with an x
+      component pack at one end of the split (part 0 for ``-x``, part
+      N-1 for ``+x``), hop the device grid, and deposit into the
+      *opposite end's* in-slots, whose unpack-adds replay in global
+      direction order.  The 8 x-neutral directions stay per-part (each
+      part exchanges exactly its own x-slice).
+
+    The result must be composed with its sibling parts
+    (``compose(*[build_faces_part_program(cfg, mesh, k, n) ...])``) —
+    engines reject the open program.  Requires ``direct26`` granularity
+    and batched triggering (the linked split is defined against that
+    lowering).
+
+    The emission below mirrors :func:`_emit_direct26` filtered by
+    direction ownership; any structural change there (tags, recv/send
+    order, unpack replay order) must be mirrored here — the bit-identity
+    acceptance test fails loudly if the two drift.
+    """
+    if cfg.granularity != "direct26":
+        raise ValueError(
+            f"linked domain split supports granularity='direct26' only "
+            f"(got {cfg.granularity!r})")
+    if not cfg.batched:
+        raise ValueError("linked domain split requires batched triggering")
+    if n_parts < 2:
+        raise ValueError("a linked split needs n_parts >= 2 "
+                         "(use build_faces_program for the unsplit domain)")
+    names = tuple(names) if names is not None else part_names(n_parts)
+    if len(names) != n_parts:
+        raise ValueError(f"need {n_parts} names, got {len(names)}")
+    cfgp = part_configs(cfg, n_parts)[part]
+    gx, gy, gz = cfg.grid
+    px, py, pz = cfgp.points
+    dtype = np.dtype(cfg.dtype)
+    prev_name = names[(part - 1) % n_parts]
+    next_name = names[(part + 1) % n_parts]
+
+    # direction ownership under the split (see docstring)
+    own = [d for d in DIRECTIONS if d[0] == 0]
+    cross_out = [d for d in DIRECTIONS
+                 if (d[0] == 1 and part == n_parts - 1)
+                 or (d[0] == -1 and part == 0)]
+    cross_in = [d for d in DIRECTIONS
+                if (d[0] == 1 and part == 0)
+                or (d[0] == -1 and part == n_parts - 1)]
+    out_dst = {d: (names[0] if d[0] == 1 else names[n_parts - 1])
+               for d in cross_out}
+    in_src = {d: (names[n_parts - 1] if d[0] == 1 else names[0])
+              for d in cross_in}
+
+    q = STQueue(mesh, name=names[part])
+    q.buffer("u", (gx, gy, gz, px, py, pz), dtype, pspec=AXES3)
+    msg_in, msg_out = {}, {}
+    for i, d in enumerate(DIRECTIONS):
+        sshape = _slab_shape(d, cfgp.points)
+        if d in own or d in cross_out:
+            msg_out[d] = q.buffer(f"out{i}", (gx, gy, gz, *sshape), dtype,
+                                  pspec=AXES3)
+        if d in own or d in cross_in:
+            msg_in[d] = q.buffer(f"in{i}", (gx, gy, gz, *sshape), dtype,
+                                 pspec=AXES3)
+
+    here = GridOffsetPeer(AXES3, (0, 0, 0))  # same-device cross-part hop
+    if cfg.interior_compute:
+        # ghost-plane ring exchange (dedicated batch: the stencil needs
+        # the planes BEFORE the overlap kernel, so this one is waited
+        # immediately — the compose interleave keeps each sender's
+        # trigger ahead of this wait)
+        q.buffer("glo", (gx, gy, gz, 1, py, pz), dtype, pspec=AXES3)
+        q.buffer("ghi", (gx, gy, gz, 1, py, pz), dtype, pspec=AXES3)
+        q.enqueue_recv("glo", here, tag=_GHOST_TAG_LO, remote=prev_name)
+        q.enqueue_recv("ghi", here, tag=_GHOST_TAG_HI, remote=next_name)
+        q.enqueue_send("u", here, tag=_GHOST_TAG_LO, remote=next_name,
+                       region=(slice(0, 1),) * 3
+                       + (slice(px - 1, px), slice(0, py), slice(0, pz)))
+        q.enqueue_send("u", here, tag=_GHOST_TAG_HI, remote=prev_name,
+                       region=(slice(0, 1),) * 3
+                       + (slice(0, 1), slice(0, py), slice(0, pz)))
+        q.enqueue_start()
+        q.enqueue_wait()
+
+    # 2. pack (own slabs + the x-crossing slabs this end owns)
+    for i, d in enumerate(DIRECTIONS):
+        if d in msg_out:
+            region = _region_for(d, cfgp.points)
+            q.enqueue_kernel(_make_pack_fn(region, cfg.pack), ["u"],
+                             [msg_out[d]], name=f"pack{i}")
+    # 1+3. pre-post all receives, then all sends, one trigger (batched)
+    for i, d in enumerate(DIRECTIONS):
+        if d not in msg_in:
+            continue
+        peer = GridOffsetPeer(AXES3, tuple(-x for x in d), cfg.periodic)
+        q.enqueue_recv(msg_in[d], peer, tag=i,
+                       remote=in_src.get(d))
+    for i, d in enumerate(DIRECTIONS):
+        if d not in msg_out:
+            continue
+        q.enqueue_send(msg_out[d], GridOffsetPeer(AXES3, d, cfg.periodic),
+                       tag=i, remote=out_dst.get(d))
+    q.enqueue_start()
+    # 4. interior compute overlapping communication (ghost-substituted)
+    if cfg.interior_compute:
+        q.enqueue_kernel(_part_interior_fn, ["u", "glo", "ghi"], ["u"],
+                         name="interior")
+    # 5. wait
+    q.enqueue_wait()
+    # 6. unpack-and-add, replayed in GLOBAL direction order so the
+    # add-accumulation order per element matches the unsplit program
+    for i, d in enumerate(DIRECTIONS):
+        if d not in msg_in:
+            continue
+        region = _region_for(tuple(-x for x in d), cfgp.points)
+        q.enqueue_kernel(_make_unpack_fn(region, cfg.pack),
+                         ["u", msg_in[d]], ["u"], name=f"unpack{i}")
+    _emit_damping(q, cfg)
+    return q.build(name=names[part], coalesce=coalesce)
+
+
 def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
                         n_iters: Optional[int] = None,
-                        tols: Optional[Tuple[float, float]] = None,
+                        tols: Optional[Tuple[float, ...]] = None,
                         max_iters: Optional[int] = None,
                         mode: str = "dataflow",
                         double_buffer: Optional[bool] = None,
-                        donate: bool = True):
-    """Two half-grid Faces queues, composed, iterated in ONE dispatch.
+                        donate: bool = True,
+                        n_parts: int = 2,
+                        exchange: bool = True):
+    """N x-split Faces queues, composed, iterated in ONE dispatch.
 
-    The domain is split into two x-halves on the *same* mesh; each half
-    gets its own STQueue program, and
-    :func:`repro.core.schedule.compose` fuses them so half B's packs and
-    interior compute interleave with half A's trigger→wait window — the
-    pipelined multi-queue schedule, with the whole loop device-resident.
+    The domain is split into ``n_parts`` x-parts (uneven sizes OK) on
+    the *same* mesh; each part gets its own STQueue program, and
+    :func:`repro.core.schedule.compose` fuses them so one part's packs
+    and interior compute interleave with another's trigger→wait window
+    — the pipelined multi-queue schedule, with the whole loop
+    device-resident.
+
+    With ``exchange=True`` (default) the parts are *linked*: they trade
+    their shared interior faces (and the stencil's ghost planes) every
+    iteration through cross-program channels, so the composed run is
+    the TRUE full-domain solve — identical to the single-queue
+    :func:`run_faces_persistent` on the whole domain, still one
+    dispatch.  With ``exchange=False`` each part iterates independently
+    (the PR-3 behaviour: N separate solves sharing a dispatch, each
+    matching its own standalone run).  "Identical" is bit-exact in
+    ``stream`` mode and in uncoalesced ``dataflow``; the default
+    dataflow+coalesce lowering agrees to within a few ULPs (XLA FMA
+    contraction differs between the two compilations — bounds and
+    analysis in tests/test_links.py and tests/test_schedule.py).
 
     Two regimes:
 
-    * ``n_iters=N`` — both halves run exactly N iterations (uniform
-      fixed loop).  Returns ``(mem, stats)``; the halves live at
-      ``mem["facesA/u"]`` / ``mem["facesB/u"]`` (see
-      :func:`merge_halves`).
-    * ``tols=(tolA, tolB)`` + ``max_iters`` — each half runs until its
-      OWN global residual drops below its own tolerance (device-decided,
-      per-program predicates).  Returns
+    * ``n_iters=N`` — every part runs exactly N iterations (uniform
+      fixed loop).  Returns ``(mem, stats)``; part k's field lives at
+      ``mem[f"{part_names(n_parts)[k]}/u"]`` (see :func:`merge_parts`).
+    * ``tols=(tol0, ..., tol{n-1})`` + ``max_iters`` — each part runs
+      until its OWN subdomain residual drops below its own tolerance
+      (device-decided, per-program predicates).  Returns
       ``(mem, residuals, n_done, stats)`` with ``residuals[name]``
-      trimmed to the realized length and ``n_done[name]`` ints — the
-      bit-exact union of two independent
-      :func:`run_faces_until_converged` runs, still ONE dispatch.
+      trimmed to the realized length and ``n_done[name]`` ints.  With
+      ``exchange=False`` this is the bit-exact union of N independent
+      :func:`run_faces_until_converged` runs; with ``exchange=True`` a
+      converged part freezes while its neighbors keep reading its
+      frozen boundary (the masked multi-queue loop), so the combined
+      field is a staged, not simultaneous, solve.
     """
     from .engine_persistent import PersistentEngine
     from .schedule import compose
 
     if (n_iters is None) == (tols is None):
         raise ValueError("pass exactly one of n_iters= or tols=")
-    cfgh = half_config(cfg)
-    ua, ub = split_halves(np.asarray(u0))
-    na, nb = PIPELINE_NAMES
+    names = part_names(n_parts)
+    cfgs = part_configs(cfg, n_parts)
+    parts = split_parts(np.asarray(u0), n_parts)
+    if exchange:
+        # the x-crossing halo links tie the split's two ends; the
+        # stencil's ghost-plane ring links every adjacent pair
+        links = [(names[0], names[-1]), (names[-1], names[0])]
+        if cfg.interior_compute:
+            ring = [(names[k], names[(k + 1) % n_parts])
+                    for k in range(n_parts)]
+            links += ring + [(b, a) for a, b in ring]
+        builders = [build_faces_part_program(cfg, mesh, k, n_parts,
+                                             names=names)
+                    for k in range(n_parts)]
+        links = sorted(set(links))
+    else:
+        links = None
+        builders = [build_faces_program(cfgs[k], mesh, name=names[k])
+                    for k in range(n_parts)]
+    init = {f"{nm}/u": p for nm, p in zip(names, parts)}
 
     if tols is None:
-        progs = [build_faces_program(cfgh, mesh, name=nm).persistent(n_iters)
-                 for nm in (na, nb)]
-        sched = compose(*progs)
+        progs = [b.persistent(n_iters) for b in builders]
+        sched = compose(*progs, links=links)
         eng = PersistentEngine(sched, mode=mode, double_buffer=double_buffer,
                                donate=donate)
-        mem = eng(eng.init_buffers({f"{na}/u": ua, f"{nb}/u": ub}))
+        mem = eng(eng.init_buffers(init))
         return mem, eng.stats
 
     if max_iters is None:
         raise ValueError("tols= requires max_iters=")
-    if len(tols) != 2:
-        raise ValueError(f"tols needs one tolerance per half, got {tols!r}")
+    if len(tols) != n_parts:
+        raise ValueError(
+            f"tols needs one tolerance per part ({n_parts}), got {tols!r}")
     progs = [
-        build_faces_program(cfgh, mesh, name=nm).persistent(
-            max_iters, until=lambda r, tol=tol: r >= tol)
-        for nm, tol in zip((na, nb), tols)
+        b.persistent(max_iters, until=lambda r, tol=tol: r >= tol)
+        for b, tol in zip(builders, tols)
     ]
-    sched = compose(*progs)
+    sched = compose(*progs, links=links)
     eng = PersistentEngine(
         sched, mode=mode, double_buffer=double_buffer, donate=donate,
-        reduce_fns={nm: global_residual_fn(cfgh, buf=f"{nm}/u")
-                    for nm in (na, nb)})
-    mem, reds, n_done = eng(eng.init_buffers({f"{na}/u": ua, f"{nb}/u": ub}))
+        reduce_fns={nm: global_residual_fn(cfgk, buf=f"{nm}/u")
+                    for nm, cfgk in zip(names, cfgs)})
+    mem, reds, n_done = eng(eng.init_buffers(init))
     n_done = {nm: int(v) for nm, v in n_done.items()}
     reds = {nm: np.asarray(r)[: n_done[nm]] for nm, r in reds.items()}
     return mem, reds, n_done, eng.stats

@@ -24,7 +24,14 @@ Matching rules (mirroring MPI ordering guarantees):
 * ``PairListPeer`` sends/recvs match when their (src → dst) pair sets
   are identical;
 * unmatched descriptors inside a batch are a program error, raised at
-  build time — the paper's equivalent would be a hang.
+  build time — the paper's equivalent would be a hang;
+* sends/recvs marked ``remote=<program>`` are *cross-program*: the
+  queue's own build leaves them open, and
+  :func:`repro.core.schedule.compose` matches them across the composed
+  programs (:func:`match_cross_program`) into channels that deposit
+  into the peer program's memory and bump the peer's completion
+  counter.  A program with open descriptors that is never composed is
+  an error at engine construction (it, too, would hang).
 
 Channel coalescing (paper §V-A contiguous-buffer step)
 ------------------------------------------------------
@@ -77,6 +84,10 @@ class Channel:
     send_region: Optional[Tuple[slice, ...]]
     recv_region: Optional[Tuple[slice, ...]]
     mode: str  # replace | add
+    # Cross-program channel (see repro.core.schedule.compose): the pid
+    # whose buffer the deposit lands in — and whose completion counter
+    # the transfer bumps.  None = the owning batch's own program.
+    dst_pid: Optional[int] = None
 
     def perm(self, mesh_shape: dict) -> Sequence[Tuple[int, int]]:
         return perm_for(self.peer, mesh_shape)[1]
@@ -104,51 +115,101 @@ def _recv_key_as_send(peer) -> Tuple:
     return _peer_key(peer)
 
 
+def _match_fifo(sends, recvs, make_channel, kind: str) -> List:
+    """Shared FIFO matcher: pair each send with the first queued recv
+    under the same (peer-direction, tag) key, build a result via
+    ``make_channel(send, recv)``, and raise on any leftover.
+
+    ``sends``/``recvs`` may carry bookkeeping payloads: each element is
+    either a bare descriptor or a ``(descriptor, extra)`` pair, and
+    ``make_channel`` receives the elements unmodified.
+    """
+    desc = lambda x: x[0] if isinstance(x, tuple) else x
+    recv_queues: dict = defaultdict(list)
+    for r in recvs:
+        recv_queues[(_recv_key_as_send(desc(r).peer), desc(r).tag)].append(r)
+
+    out: List = []
+    for s in sends:
+        d = desc(s)
+        q = recv_queues.get((_peer_key(d.peer), d.tag))
+        if not q:
+            raise MatchError(
+                f"unmatched {kind} send: buf={d.buf!r} tag={d.tag} "
+                f"peer={d.peer}"
+                + (f" remote={d.remote!r}" if d.remote else "")
+                + " (no matching posted receive; ST forbids wildcards so "
+                  "this would hang at runtime)"
+            )
+        out.append(make_channel(s, q.pop(0)))
+
+    leftovers = [desc(r) for q in recv_queues.values() for r in q]
+    if leftovers:
+        r = leftovers[0]
+        raise MatchError(
+            f"unmatched {kind} recv: buf={r.buf!r} tag={r.tag} peer={r.peer}"
+            + (f" remote={r.remote!r}" if r.remote else "")
+            + f" ({len(leftovers)} receive(s) never matched by a send)"
+        )
+    return out
+
+
+def _channel_for(s: SendDesc, r: RecvDesc,
+                 dst_pid: Optional[int] = None) -> Channel:
+    """Lower one matched (send, recv) pair to its ppermute channel."""
+    axis = (
+        s.peer.axis
+        if isinstance(s.peer, (OffsetPeer, PairListPeer))
+        else s.peer.axes
+    )
+    return Channel(
+        src_buf=s.buf,
+        dst_buf=r.buf,
+        axis=axis,
+        peer=s.peer,
+        tag=s.tag,
+        send_region=s.region,
+        recv_region=r.region,
+        mode=r.mode,
+        dst_pid=dst_pid,
+    )
+
+
 def match_batch(
     sends: Sequence[SendDesc], recvs: Sequence[RecvDesc]
 ) -> List[Channel]:
     """Match one trigger batch's sends against its recvs (FIFO per key)."""
-    recv_queues: dict = defaultdict(list)
-    for r in recvs:
-        recv_queues[(_recv_key_as_send(r.peer), r.tag)].append(r)
+    return _match_fifo(sends, recvs, _channel_for, "ST")
 
-    channels: List[Channel] = []
-    for s in sends:
-        key = (_peer_key(s.peer), s.tag)
-        q = recv_queues.get(key)
-        if not q:
-            raise MatchError(
-                f"unmatched ST send: buf={s.buf!r} tag={s.tag} peer={s.peer} "
-                f"(no posted receive in batch; ST forbids wildcards so this "
-                f"would hang at runtime)"
-            )
-        r = q.pop(0)
-        axis = (
-            s.peer.axis
-            if isinstance(s.peer, (OffsetPeer, PairListPeer))
-            else s.peer.axes
-        )
-        channels.append(
-            Channel(
-                src_buf=s.buf,
-                dst_buf=r.buf,
-                axis=axis,
-                peer=s.peer,
-                tag=s.tag,
-                send_region=s.region,
-                recv_region=r.region,
-                mode=r.mode,
-            )
-        )
 
-    leftovers = [r for q in recv_queues.values() for r in q]
-    if leftovers:
-        r = leftovers[0]
-        raise MatchError(
-            f"unmatched ST recv: buf={r.buf!r} tag={r.tag} peer={r.peer} "
-            f"({len(leftovers)} receive(s) never matched by a send)"
-        )
-    return channels
+def match_cross_program(
+    sends: Sequence[Tuple[SendDesc, int]],
+    recvs: Sequence[Tuple[RecvDesc, int]],
+    dst_pid: int,
+) -> List[Tuple[Channel, int, int]]:
+    """Match one program's *open* (``remote=``) sends against a peer
+    program's open recvs — the cross-program half of the static match.
+
+    ``sends``/``recvs`` are ``(descriptor, batch_index)`` pairs in the
+    owning program's enqueue order (batch indices are the *composed*
+    schedule's global indices); matching follows the same FIFO
+    non-overtaking rules as :func:`match_batch`, pooled across the
+    programs' batches (keys are (peer-direction, tag), so distinct
+    batches use distinct tags or distinct directions).
+
+    Returns ``[(channel, src_batch, dst_batch), ...]`` where each
+    channel carries ``dst_pid`` — the receiving program's identity: the
+    engines trigger it off the *sender's* counter bank but bump the
+    *receiver's* completion counter, so the receiver's wait gate
+    observes the sender's completion (the cross-stream chaining of
+    triggered operations).  Raises :class:`MatchError` if any open
+    descriptor of the pair stays unmatched.
+    """
+    return _match_fifo(
+        sends, recvs,
+        lambda s, r: (_channel_for(s[0], r[0], dst_pid=dst_pid), s[1], r[1]),
+        "cross-program",
+    )
 
 
 @dataclasses.dataclass
@@ -167,6 +228,20 @@ class Batch:
     # Build-time coalescing plan (see coalesce_batch); None when the
     # batch was built with coalescing off or declined the batch.
     plan: Optional["CoalescePlan"] = None
+    # Whether coalescing was *requested* at build time (compose() must
+    # re-derive plans after cross-program channels join the batch, and
+    # a None plan alone cannot distinguish "declined" from "off").
+    coalesce: bool = False
+    # Cross-program descriptors (remote= sends/recvs) this batch holds
+    # that are still UNRESOLVED: queue.build() records them here and
+    # compose() consumes them.  A program with open descriptors cannot
+    # run on an engine — it must be composed with its peer program(s).
+    open_sends: List[Any] = dataclasses.field(default_factory=list)
+    open_recvs: List[Any] = dataclasses.field(default_factory=list)
+    # Resolved cross-program receives: destination buffers deposited
+    # into this batch's slot(s) by another program's trigger, which this
+    # batch's wait must gate (filled by compose()).
+    cross_recv_bufs: Tuple[str, ...] = ()
 
 
 # --------------------------------------------------------------------------

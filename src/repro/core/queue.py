@@ -16,6 +16,12 @@ MPIX_Enqueue_wait       ``queue.enqueue_wait()``
 (multi-queue)           ``compose(progA, progB, ...)`` /
                         ``prog.concurrent_with(...)`` → :class:`STSchedule`
                         (:mod:`.schedule` — N queues, one device program)
+(cross-queue            ``enqueue_send/recv(..., remote="peerprog")`` +
+ channels)              ``compose(..., links=[("A","B"), ...])``: a send in
+                        queue A deposits into queue B's memory, trigger on
+                        A's counter bank, completion on B's — B's wait gate
+                        observes A's completion (halo exchange *between*
+                        composed queues)
 (§V-A contiguous        ``build(coalesce=True)`` →
  MPI buffer)            :class:`~repro.core.matching.CoalescedChannel` plan
                         per batch: matched channels grouped by
@@ -49,7 +55,14 @@ Semantics preserved from the paper:
   :class:`~repro.core.schedule.STSchedule` interleaves the programs'
   batches round-robin with namespaced buffers and per-program counter
   banks, so one queue's communication overlaps another's compute in a
-  single host dispatch — the multi-DWQ pipelined schedule.
+  single host dispatch — the multi-DWQ pipelined schedule;
+* concurrent queues may also *chain*: a send/recv enqueued with
+  ``remote=<peer program>`` stays open through this queue's build and
+  is matched by ``compose`` into a cross-program channel — triggered by
+  the sender's counters, deposited into the receiver's memory,
+  completed on the receiver's counters (so the receiver's ``wait``
+  observes it).  This is the halo exchange *between* composed queues
+  (e.g. :func:`repro.core.halo.build_faces_part_program`).
 """
 
 from __future__ import annotations
@@ -141,6 +154,29 @@ class STProgram:
     @property
     def is_persistent(self) -> bool:
         return self.n_iters > 1 or self.until is not None
+
+    @property
+    def open_links(self) -> int:
+        """Number of unresolved cross-program (``remote=``) descriptors.
+
+        Nonzero means this program declares channels whose peer lives in
+        another program: it must go through
+        :func:`repro.core.schedule.compose` (which resolves them into
+        cross-program channels) before any engine may run it.
+        """
+        return sum(len(b.open_sends) + len(b.open_recvs)
+                   for b in self.batches)
+
+    def require_closed(self) -> None:
+        """Raise unless every cross-program descriptor is resolved
+        (engines call this: an open channel has no matching side and
+        would hang)."""
+        if self.open_links:
+            raise ValueError(
+                f"program {self.name!r} has {self.open_links} unresolved "
+                f"cross-program (remote=) descriptor(s): compose() it with "
+                f"its peer program(s) before running — an open channel has "
+                f"no matching side and would hang")
 
     def buffers_by_pid(self) -> Dict[int, Tuple[str, ...]]:
         """Buffer names grouped by owning program id.
@@ -278,23 +314,40 @@ class STQueue:
         self._descs.append(KernelDesc(fn, tuple(reads), tuple(writes), name))
         self._built = None
 
-    def enqueue_send(self, buf: str, peer, tag: int, region=None) -> None:
-        """MPIX_Enqueue_send: deferred tagged send (returns immediately)."""
+    def enqueue_send(self, buf: str, peer, tag: int, region=None,
+                     remote: Optional[str] = None) -> None:
+        """MPIX_Enqueue_send: deferred tagged send (returns immediately).
+
+        With ``remote=<program name>`` the matching receive lives in
+        another queue's program: the send stays *open* through this
+        queue's build and is matched by
+        :func:`repro.core.schedule.compose` into a cross-program
+        channel depositing into the peer program's memory.
+        """
         self._check_live()
         self._check_buf(buf)
         self._descs.append(
-            SendDesc(buf, peer, tag, threshold=self._trigger.next_threshold(), region=region)
+            SendDesc(buf, peer, tag, threshold=self._trigger.next_threshold(),
+                     region=region, remote=remote)
         )
         self._built = None
 
-    def enqueue_recv(self, buf: str, peer, tag: int, region=None, mode: str = "replace") -> None:
-        """MPIX_Enqueue_recv: deferred tagged receive (returns immediately)."""
+    def enqueue_recv(self, buf: str, peer, tag: int, region=None, mode: str = "replace",
+                     remote: Optional[str] = None) -> None:
+        """MPIX_Enqueue_recv: deferred tagged receive (returns immediately).
+
+        With ``remote=<program name>`` the matching send lives in
+        another queue's program (see :meth:`enqueue_send`); the wait
+        covering this batch then gates on the *sender's* completion,
+        wired across the per-program counter banks by the engines.
+        """
         self._check_live()
         self._check_buf(buf)
         if mode not in ("replace", "add"):
             raise QueueError("recv mode must be 'replace' or 'add'")
         self._descs.append(
-            RecvDesc(buf, peer, tag, threshold=self._trigger.next_threshold(), region=region, mode=mode)
+            RecvDesc(buf, peer, tag, threshold=self._trigger.next_threshold(),
+                     region=region, mode=mode, remote=remote)
         )
         self._built = None
 
@@ -379,7 +432,19 @@ class STQueue:
             elif isinstance(d, CollDesc):
                 pending_colls.append(d)
             elif isinstance(d, StartDesc):
-                channels = match_batch(pending_sends, pending_recvs)
+                # remote= sends/recvs pair with another program: leave
+                # them open for compose() instead of matching here
+                local_sends = [s for s in pending_sends if s.remote is None]
+                local_recvs = [r for r in pending_recvs if r.remote is None]
+                open_sends = [s for s in pending_sends if s.remote is not None]
+                open_recvs = [r for r in pending_recvs if r.remote is not None]
+                for o in open_sends + open_recvs:
+                    if o.remote == resolved:
+                        raise QueueError(
+                            f"remote={resolved!r} names this program itself: "
+                            f"a channel to the own queue is a plain (local) "
+                            f"send/recv pair, not a cross-program link")
+                channels = match_batch(local_sends, local_recvs)
                 plan = (coalesce_batch(channels, self._buffers, mesh_shape)
                         if coalesce else None)
                 batches.append(
@@ -389,6 +454,9 @@ class STQueue:
                         channels=channels,
                         colls=list(pending_colls),
                         plan=plan,
+                        coalesce=coalesce,
+                        open_sends=open_sends,
+                        open_recvs=open_recvs,
                     )
                 )
                 pending_sends, pending_recvs, pending_colls = [], [], []

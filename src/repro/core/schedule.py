@@ -38,12 +38,33 @@ yields a schedule the persistent engine runs until **all** programs'
 predicates terminate, freezing each program's state at its own
 convergence point and reporting a per-program realized iteration count
 (see :class:`~repro.core.engine_persistent.PersistentEngine`).
+
+Cross-program channels (links)
+------------------------------
+Sub-programs need not iterate independently: a send enqueued with
+``remote="B"`` in program A is matched (at compose time, same static
+rules) against a recv enqueued with ``remote="A"`` in program B, and
+becomes a **cross-program channel** — A's trigger fires it, the
+payload deposits into B's memory, and the completion is wired into
+*B's* counter bank so B's wait gate observes A's completion.  That is
+how triggered operations chain *across* concurrent streams (the
+fully-offloaded follow-on of arXiv:2306.15773 / the MPI+X taxonomy of
+arXiv:2406.05594): the composed halves of a split domain exchange their
+shared faces each iteration instead of drifting apart.  The segment
+interleaver becomes link-aware — a link's trigger (the sender's
+``start``) is always emitted before the consumer's gating ``wait``; a
+cycle of such constraints is a composition deadlock and raises
+:class:`ScheduleError`.  ``compose(..., links=[("A", "B"), ...])``
+optionally *declares* the expected program pairs, and the realized link
+set must match the declaration exactly.  Matched links are recorded on
+``STSchedule.links`` for introspection.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .descriptors import (
     CollDesc,
@@ -53,7 +74,7 @@ from .descriptors import (
     StartDesc,
     WaitDesc,
 )
-from .matching import Batch, coalesce_batch
+from .matching import Batch, MatchError, coalesce_batch, match_cross_program
 from .queue import STProgram
 
 
@@ -74,6 +95,24 @@ class SubProgram:
     n_batches: int
 
 
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One resolved cross-program channel (introspection metadata).
+
+    ``src_batch``/``dst_batch`` are *global* (schedule) batch indices:
+    the sender's trigger batch and the batch whose wait gates the
+    deposit on the receiving side.  ``dst_buf`` is the namespaced
+    destination buffer the sender deposits into.
+    """
+
+    src: str
+    dst: str
+    tag: int
+    src_batch: int
+    dst_batch: int
+    dst_buf: str
+
+
 @dataclasses.dataclass
 class STSchedule(STProgram):
     """N concurrent STPrograms fused into one device-resident program.
@@ -83,6 +122,9 @@ class STSchedule(STProgram):
     """
 
     subs: Tuple[SubProgram, ...] = ()
+    # Resolved cross-program channels (empty when the sub-programs
+    # iterate independently).
+    links: Tuple[Link, ...] = ()
 
     def buffers_by_pid(self) -> Dict[int, Tuple[str, ...]]:
         return {s.pid: s.buffers for s in self.subs}
@@ -136,18 +178,52 @@ def _segments(descs) -> List[List[Any]]:
     return segs
 
 
-def _interleave(per_prog_segments: List[List[List[Any]]]) -> Tuple[Any, ...]:
-    """Round-robin merge of the programs' segment lists."""
+def _interleave(
+    per_prog_segments: List[List[List[Any]]],
+    constraints: Optional[Dict[Tuple[int, int], set]] = None,
+) -> Tuple[Any, ...]:
+    """Round-robin merge of the programs' segment lists.
+
+    ``constraints`` maps a segment ``(pid, seg_idx)`` to the set of
+    segments that must be emitted *before* it — used to keep every
+    cross-program link's trigger (the sender's ``start`` segment) ahead
+    of the consumer's gating ``wait`` segment.  A blocked segment is
+    deferred to a later round (per-program FIFO order is never
+    reordered — the program simply yields its turn); with no
+    constraints this degenerates to the plain round-robin merge.  An
+    unsatisfiable cycle raises :class:`ScheduleError`.
+    """
+    constraints = constraints or {}
     out: List[Any] = []
-    rounds = max((len(s) for s in per_prog_segments), default=0)
-    for r in range(rounds):
-        for segs in per_prog_segments:
-            if r < len(segs):
-                out.extend(segs[r])
+    ptr = [0] * len(per_prog_segments)
+    emitted: set = set()
+    remaining = sum(len(s) for s in per_prog_segments)
+    while remaining:
+        progress = False
+        for p, segs in enumerate(per_prog_segments):
+            if ptr[p] >= len(segs):
+                continue
+            need = constraints.get((p, ptr[p]), ())
+            if any(pre not in emitted for pre in need):
+                continue  # blocked on a link's trigger — yield this round
+            out.extend(segs[ptr[p]])
+            emitted.add((p, ptr[p]))
+            ptr[p] += 1
+            remaining -= 1
+            progress = True
+        if not progress:
+            stuck = [(p, ptr[p]) for p in range(len(per_prog_segments))
+                     if ptr[p] < len(per_prog_segments[p])]
+            raise ScheduleError(
+                f"cross-program link cycle: segments {stuck} each wait on a "
+                f"trigger that can only be emitted after them (two programs "
+                f"may not each gate a wait on the other's *later* start)"
+            )
     return tuple(out)
 
 
-def compose(*programs: STProgram, name: Optional[str] = None) -> STSchedule:
+def compose(*programs: STProgram, name: Optional[str] = None,
+            links: Optional[Sequence[Tuple[str, str]]] = None) -> STSchedule:
     """Fuse N matched STPrograms into one :class:`STSchedule`.
 
     Buffers are namespaced ``"{program.name}/{buffer}"``; descriptors and
@@ -159,10 +235,24 @@ def compose(*programs: STProgram, name: Optional[str] = None) -> STSchedule:
     whole multi-queue loop — per-program counts and predicates included
     — as ONE host dispatch.
 
+    Open (``remote=``) sends/recvs are matched *across* the composed
+    programs into cross-program channels: the sender's trigger fires
+    them, the deposit lands in the receiver's memory, and the
+    completion bumps the receiver's counter bank (the receiver's wait
+    gate observes the sender's completion).  Coalescing plans are
+    re-derived per batch after cross channels join it, so fused
+    transfers may carry cross payloads but never merge two *triggering*
+    programs' batches (plans stay per-batch, batches stay per-pid).
+    The interleaving keeps every link's trigger ahead of its consumer's
+    gating wait.  ``links=[(src, dst), ...]`` optionally declares the
+    expected program pairs; the realized pairs must match exactly.
+
     Raises :class:`ScheduleError` for programs on different meshes,
     duplicate program names (cross-program buffer aliasing — composing
-    a program with itself is the canonical offender), or nested
-    schedules (compose all leaves in one call instead).
+    a program with itself is the canonical offender), nested schedules
+    (compose all leaves in one call instead), unmatched or undeclared
+    cross-program descriptors, and link cycles the interleaver cannot
+    order.
     """
     if not programs:
         raise ScheduleError("compose() needs at least one program")
@@ -191,7 +281,14 @@ def compose(*programs: STProgram, name: Optional[str] = None) -> STSchedule:
     batches: List[Batch] = []
     subs: List[SubProgram] = []
     per_prog_segments: List[List[List[Any]]] = []
+    # open cross-program descriptors, pooled per (src_name, dst_name):
+    # (renamed descriptor, global batch index) in enqueue order
+    open_send_pool: Dict[Tuple[str, str], List[Tuple[Any, int]]] = \
+        defaultdict(list)
+    open_recv_pool: Dict[Tuple[str, str], List[Tuple[Any, int]]] = \
+        defaultdict(list)
     batch_lo = 0
+    mesh_shape = dict(mesh.shape)
 
     for pid, prog in enumerate(programs):
         ns = prog.name
@@ -231,24 +328,32 @@ def compose(*programs: STProgram, name: Optional[str] = None) -> STSchedule:
             return new
 
         descs = [rn(d) for d in prog.descriptors]
-        mesh_shape = dict(mesh.shape)
         for b in prog.batches:
             renamed_channels = [dataclasses.replace(
                 ch, src_buf=rename[ch.src_buf],
                 dst_buf=rename[ch.dst_buf]) for ch in b.channels]
-            # re-derive the coalescing plan over the renamed channels:
-            # batches are per-pid, so a plan can never merge channels
-            # across programs — each queue keeps its own fused transfers
-            plan = (coalesce_batch(renamed_channels, buffers, mesh_shape)
-                    if b.plan is not None else None)
+            gidx = b.index + batch_lo
+            for s in b.open_sends:
+                if s.remote not in names:
+                    raise ScheduleError(
+                        f"program {ns!r} sends to unknown program "
+                        f"{s.remote!r} (composing {sorted(names)})")
+                open_send_pool[(ns, s.remote)].append((rn(s), gidx))
+            for r in b.open_recvs:
+                if r.remote not in names:
+                    raise ScheduleError(
+                        f"program {ns!r} receives from unknown program "
+                        f"{r.remote!r} (composing {sorted(names)})")
+                open_recv_pool[(r.remote, ns)].append((rn(r), gidx))
             batches.append(Batch(
-                index=b.index + batch_lo,
+                index=gidx,
                 kernels_before=[rn(k) for k in b.kernels_before],
                 channels=renamed_channels,
                 colls=[rn(c) for c in b.colls],
                 waited=b.waited,
                 pid=pid,
-                plan=plan,
+                plan=None,          # (re)derived below, links included
+                coalesce=b.coalesce or b.plan is not None,
             ))
         subs.append(SubProgram(
             name=ns, pid=pid, buffers=tuple(rename.values()),
@@ -258,13 +363,85 @@ def compose(*programs: STProgram, name: Optional[str] = None) -> STSchedule:
         per_prog_segments.append(_segments(descs))
         batch_lo += prog.n_batches
 
+    # -- cross-program matching (links) ------------------------------------
+    pid_of_name = {s.name: s.pid for s in subs}
+    batch_by_index = {b.index: b for b in batches}
+    links_meta: List[Link] = []
+    for pair in sorted(set(open_send_pool) | set(open_recv_pool)):
+        src_name, dst_name = pair
+        try:
+            matched = match_cross_program(
+                open_send_pool.get(pair, []), open_recv_pool.get(pair, []),
+                dst_pid=pid_of_name[dst_name])
+        except MatchError as e:
+            raise ScheduleError(
+                f"cross-program matching {src_name!r} -> {dst_name!r} "
+                f"failed: {e}") from e
+        for ch, src_batch, dst_batch in matched:
+            # the channel executes at the *sender's* trigger: it joins
+            # the sender's batch (after the batch's own channels); the
+            # receiver's batch records the deposited buffer so its wait
+            # gates it (per-pid boundary: trigger side vs wait side)
+            batch_by_index[src_batch].channels.append(ch)
+            db = batch_by_index[dst_batch]
+            db.cross_recv_bufs = db.cross_recv_bufs + (ch.dst_buf,)
+            links_meta.append(Link(
+                src=src_name, dst=dst_name, tag=ch.tag,
+                src_batch=src_batch, dst_batch=dst_batch,
+                dst_buf=ch.dst_buf))
+
+    if links is not None:
+        declared = {tuple(p) for p in links}
+        realized = {(l.src, l.dst) for l in links_meta}
+        if declared != realized:
+            raise ScheduleError(
+                f"links= declares {sorted(declared)} but the programs' "
+                f"remote descriptors realize {sorted(realized)}")
+
+    # coalescing plans, re-derived now that cross channels joined their
+    # trigger batches (per-batch, so two programs' *triggers* never merge)
+    for b in batches:
+        if b.coalesce:
+            b.plan = coalesce_batch(b.channels, buffers, mesh_shape)
+
+    # -- link-aware interleaving -------------------------------------------
+    # a link's trigger (sender's start segment) must be emitted before
+    # the consumer's gating wait segment (the first wait at-or-after the
+    # receiving batch — completion counters are cumulative)
+    start_seg: Dict[Tuple[int, int], int] = {}
+    waits_of: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+    for p, segs in enumerate(per_prog_segments):
+        for si, seg in enumerate(segs):
+            for d in seg:
+                if isinstance(d, StartDesc):
+                    start_seg[(p, d.batch)] = si
+                elif isinstance(d, WaitDesc):
+                    waits_of[p].append((d.batch, si))
+    constraints: Dict[Tuple[int, int], set] = defaultdict(set)
+    for l in links_meta:
+        src_pid, dst_pid = pid_of_name[l.src], pid_of_name[l.dst]
+        gate_si = next((si for wb, si in waits_of[dst_pid]
+                        if wb >= l.dst_batch), None)
+        if gate_si is None:
+            # with no covering wait there is nothing to order the
+            # deposit against: a consumer kernel could be interleaved
+            # ahead of the sender's trigger and silently read stale data
+            raise ScheduleError(
+                f"program {l.dst!r} posts a remote receive (tag {l.tag}, "
+                f"from {l.src!r}) in a batch with no following "
+                f"enqueue_wait: the cross-program deposit could never be "
+                f"observed deterministically")
+        constraints[(dst_pid, gate_si)].add(
+            (src_pid, start_seg[(src_pid, l.src_batch)]))
+
     return STSchedule(
         buffers=buffers,
-        descriptors=_interleave(per_prog_segments),
+        descriptors=_interleave(per_prog_segments, constraints),
         batches=tuple(batches),
         mesh=mesh,
         name=name or "+".join(names),
         n_iters=max(p.n_iters for p in programs),
         until=None,
         subs=tuple(subs),
+        links=tuple(links_meta),
     )

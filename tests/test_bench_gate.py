@@ -1,0 +1,89 @@
+"""benchmarks/run.py ``check_against`` — the Faces perf-regression gate.
+
+Pure-logic unit tests (no JAX, no timing): the median comparison must
+run ONLY when the recorded file carries a ``_meta`` loop-settings stamp
+that matches the fresh run's — a stamp-less (stale) file must fall back
+to invariants-only instead of comparing medians at unknown settings.
+"""
+
+import importlib
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+META = {"faces_inner": 10, "faces_max_iters": 64}
+OTHER_META = {"faces_inner": 6, "faces_max_iters": 16}
+
+
+@pytest.fixture()
+def check_against(monkeypatch):
+    # benchmarks.run sets a default XLA_FLAGS at import for its own
+    # __main__ use; pin the var (and restore after) so importing the
+    # module can never leak an 8-device grid into this test process
+    monkeypatch.setenv("XLA_FLAGS", os.environ.get("XLA_FLAGS", ""))
+    monkeypatch.syspath_prepend(REPO)
+    mod = importlib.import_module("benchmarks.run")
+    return mod.check_against
+
+
+VARIANTS = ("faces_fig8/baseline", "faces_fig8/st_offload",
+            "faces_fig11/baseline", "faces_fig11/st_offload")
+
+
+def _faces(median_ms, meta=META):
+    """A run where every tracked variant is steady except fig8/baseline,
+    whose median is ``median_ms`` (the speed-normalization uses the
+    run-wide MEDIAN ratio, so a lone drifting variant cannot hide)."""
+    out = {k: {"median_ms": 50.0, "dispatches": 1} for k in VARIANTS}
+    out["faces_fig8/baseline"] = {"median_ms": median_ms, "dispatches": 79}
+    if meta is not None:
+        out["_meta"] = dict(meta)
+    return out
+
+
+def _write(tmp_path, data):
+    path = tmp_path / "BENCH_faces.json"
+    path.write_text(json.dumps(data))
+    return str(path)
+
+
+def test_matching_meta_compares_medians(tmp_path, check_against, capsys):
+    path = _write(tmp_path, _faces(100.0))
+    # >20% regression at MATCHING settings must fail the gate
+    assert check_against(_faces(200.0), path) == 1
+    assert "PERF GATE FAILED" in capsys.readouterr().out
+    # and an unchanged run passes with the medians actually checked
+    assert check_against(_faces(100.0), path) == 0
+    assert f"{len(VARIANTS)} tracked medians" in capsys.readouterr().out
+
+
+def test_mismatched_meta_skips_medians(tmp_path, check_against, capsys):
+    path = _write(tmp_path, _faces(100.0))
+    # same 2x "regression", but at different loop settings: skipped
+    assert check_against(_faces(200.0, meta=OTHER_META), path) == 0
+    out = capsys.readouterr().out
+    assert "settings differ" in out and "median checks skipped" in out
+
+
+def test_absent_stored_meta_skips_medians(tmp_path, check_against, capsys):
+    """A recorded file WITHOUT a _meta stamp must not be median-compared
+    at arbitrary settings — a stale file used to fail (or wrongly pass)
+    CI this way."""
+    path = _write(tmp_path, _faces(100.0, meta=None))
+    assert check_against(_faces(200.0), path) == 0
+    out = capsys.readouterr().out
+    assert "no _meta settings stamp" in out
+    assert "median checks skipped" in out
+    # invariants still enforced even without the stamp
+    stale = _faces(100.0, meta=None)
+    stale["faces_figP/fused_per_iter"] = {"median_ms": 1.0, "dispatches": 10}
+    path = _write(tmp_path, stale)
+    fresh = _faces(100.0)
+    fresh["faces_figP/persistent"] = {"median_ms": 9.0, "dispatches": 1}
+    fresh["faces_figP/fused_per_iter"] = {"median_ms": 3.0, "dispatches": 10}
+    assert check_against(fresh, path) == 1
+    assert "1-dispatch path" in capsys.readouterr().out

@@ -29,6 +29,7 @@ from repro.core import (
     faces_oracle,
     half_config,
     merge_halves,
+    merge_parts,
     run_faces_persistent,
     run_faces_pipelined,
     run_faces_until_converged,
@@ -293,9 +294,10 @@ def test_composed_mixed_iteration_counts():
 
 @pytest.mark.parametrize("double_buffer", [True, False])
 def test_composed_per_program_predicates(double_buffer):
-    """Each half runs to its OWN tolerance inside one dispatch and
-    bit-matches an independent until-converged run (the acceptance
-    contrast of the pipelined multi-queue schedule)."""
+    """Each (unlinked) half runs to its OWN tolerance inside one
+    dispatch and bit-matches an independent until-converged run (the
+    acceptance contrast of the pipelined multi-queue schedule;
+    exchange=False keeps the halves independent)."""
     cfg = FacesConfig(grid=(1, 1, 1), points=(6, 3, 4), periodic=True,
                       damping=0.12)
     u0 = _u0(cfg, seed=5)
@@ -303,7 +305,7 @@ def test_composed_per_program_predicates(double_buffer):
     tols = (1e-1, 1e-3)
     mem, reds, n_done, stats = run_faces_pipelined(
         cfg, mesh, u0, tols=tols, max_iters=50,
-        double_buffer=double_buffer)
+        double_buffer=double_buffer, exchange=False)
     assert stats.dispatches == 1 and stats.sync_points == 0
     assert n_done["facesA"] < n_done["facesB"] < 50  # both converged
 
@@ -319,11 +321,14 @@ def test_composed_per_program_predicates(double_buffer):
         np.testing.assert_array_equal(reds[nm], ind_res, err_msg=nm)
 
 
-def test_pipelined_fixed_matches_oracle():
+def test_pipelined_unlinked_matches_per_half_oracle():
+    """exchange=False keeps the PR-3 semantics: each half is its own
+    independent solve (per-half oracle, NOT the full-domain update)."""
     cfg = FacesConfig(grid=(1, 1, 1), points=(6, 4, 3), periodic=True)
     u0 = _u0(cfg, seed=6)
     mesh = _mesh111()
-    mem, stats = run_faces_pipelined(cfg, mesh, u0, n_iters=3)
+    mem, stats = run_faces_pipelined(cfg, mesh, u0, n_iters=3,
+                                     exchange=False)
     assert stats.dispatches == 1
     cfgh = half_config(cfg)
     refs = []
@@ -337,20 +342,29 @@ def test_pipelined_fixed_matches_oracle():
                                rtol=1e-4, atol=1e-4)
 
 
-def test_split_merge_roundtrip_and_odd_points():
+def test_split_merge_roundtrip_uneven_and_errors():
+    from repro.core import part_configs, part_points, split_parts
+
     cfg = FacesConfig(grid=(1, 1, 1), points=(6, 4, 3))
     u0 = _u0(cfg)
     ua, ub = split_halves(u0)
     np.testing.assert_array_equal(np.asarray(merge_halves(ua, ub)), u0)
-    with pytest.raises(ValueError, match="even"):
-        split_halves(_u0(FacesConfig(grid=(1, 1, 1), points=(5, 4, 3))))
-    with pytest.raises(ValueError, match="even"):
-        half_config(FacesConfig(grid=(1, 1, 1), points=(5, 4, 3)))
+    # odd sizes split unevenly instead of erroring (first part larger)
+    odd = _u0(FacesConfig(grid=(1, 1, 1), points=(5, 4, 3)))
+    oa, ob = split_halves(odd)
+    assert oa.shape[3] == 3 and ob.shape[3] == 2
+    np.testing.assert_array_equal(np.asarray(merge_halves(oa, ob)), odd)
+    assert part_points(7, 3) == (3, 2, 2)
+    assert [c.points[0] for c in part_configs(cfg, 4)] == [2, 2, 1, 1]
+    parts = split_parts(u0, 4)
+    np.testing.assert_array_equal(np.asarray(merge_parts(parts)), u0)
+    with pytest.raises(ValueError, match="n_parts"):
+        part_points(3, 4)  # more parts than planes
     with pytest.raises(ValueError, match="exactly one"):
         run_faces_pipelined(cfg, _mesh111(), u0)
     with pytest.raises(ValueError, match="max_iters"):
         run_faces_pipelined(cfg, _mesh111(), u0, tols=(1e-2, 1e-3))
-    with pytest.raises(ValueError, match="per half"):
+    with pytest.raises(ValueError, match="per part"):
         run_faces_pipelined(cfg, _mesh111(), u0, tols=(1e-2,), max_iters=5)
 
 
@@ -421,28 +435,40 @@ from repro.parallel import make_mesh
 mesh = make_mesh((2, 2, 2), ("gx", "gy", "gz"))
 cfg = FacesConfig(grid=(2, 2, 2), points=(6, 4, 4), damping=0.12)
 u0 = np.random.RandomState(0).randn(2, 2, 2, 6, 4, 4).astype(np.float32)
+N = 3
 
-# fixed-count composed loop, both modes.  Stream mode is bit-exact;
-# dataflow gives XLA fusion freedom, so the composed program's float
-# rounding may drift by ~1 ULP on a real multi-device grid.
+# fixed-count composed loop (exchange=False: independent halves), both
+# modes.  Stream mode is bit-exact.  Dataflow mode drifts at the ULP
+# level: pinned down (PR 5) to the *coalesced* lowering under dataflow
+# ordering — the fused-transfer pack/slice gives XLA a different fusion
+# context than the per-channel program, so some mul-add chains contract
+# to FMA in one compilation but not the other (transport itself is
+# verbatim; with coalesce=False or stream ordering the comparison is
+# exact — asserted in tests/test_links.py).  Per-element the divergence
+# is a few eps, amplified by the 26-direction accumulation each
+# iteration: the DOCUMENTED bound is rtol=1e-6 (~8 eps) with atol=1e-7
+# for the damped near-zero tail.  Do not widen these without updating
+# the analysis above.
+DRIFT_RTOL, DRIFT_ATOL = 1e-6, 1e-7
 for mode in ("stream", "dataflow"):
-    mem, stats = run_faces_pipelined(cfg, mesh, u0, n_iters=3, mode=mode)
+    mem, stats = run_faces_pipelined(cfg, mesh, u0, n_iters=N, mode=mode,
+                                     exchange=False)
     assert stats.dispatches == 1
     cfgh = half_config(cfg)
     for nm, u in zip(("facesA", "facesB"), split_halves(u0)):
-        ind, _ = run_faces_persistent(cfgh, mesh, u, n_iters=3, mode=mode)
+        ind, _ = run_faces_persistent(cfgh, mesh, u, n_iters=N, mode=mode)
         if mode == "stream":
             np.testing.assert_array_equal(np.asarray(mem[f"{nm}/u"]),
                                           np.asarray(ind["u"]))
         else:
             np.testing.assert_allclose(np.asarray(mem[f"{nm}/u"]),
                                        np.asarray(ind["u"]),
-                                       rtol=1e-6, atol=1e-7)
+                                       rtol=DRIFT_RTOL, atol=DRIFT_ATOL)
 
 # per-program predicates on the real grid (dataflow default)
 tols = (1e-1, 1e-2)
 mem, reds, n_done, stats = run_faces_pipelined(
-    cfg, mesh, u0, tols=tols, max_iters=40)
+    cfg, mesh, u0, tols=tols, max_iters=40, exchange=False)
 assert stats.dispatches == 1
 cfgh = half_config(cfg)
 for nm, u, tol in zip(("facesA", "facesB"), split_halves(u0), tols):
@@ -450,7 +476,8 @@ for nm, u, tol in zip(("facesA", "facesB"), split_halves(u0), tols):
                                                max_iters=40)
     assert inn == n_done[nm], (nm, inn, n_done[nm])
     np.testing.assert_allclose(np.asarray(mem[f"{nm}/u"]),
-                               np.asarray(im["u"]), rtol=1e-6, atol=1e-7)
+                               np.asarray(im["u"]),
+                               rtol=DRIFT_RTOL, atol=DRIFT_ATOL)
     np.testing.assert_allclose(reds[nm], ir, rtol=1e-6)
 print("composed 8dev OK")
 """)

@@ -1,0 +1,281 @@
+"""Serving benchmark — tok/s and latency under a synthetic arrival
+process (the ML-serving face of the paper's offload thesis).
+
+Three variants serve the SAME synthetic request trace (fixed prompts,
+Poisson arrival offsets) on a tiny dense config:
+
+host_stepped  static batching, legacy decode loop: one host dispatch
+              per generated token — the "CPU orchestrates every op"
+              anti-pattern the ST design eliminates.
+resident      static batching, decode as ONE device-resident
+              ``lax.while_loop`` dispatch per batch.
+continuous    continuous batching: requests admitted into freed cache
+              slots between dispatches, prefill of incoming requests
+              composed with in-flight decode in ONE dispatch
+              (:func:`repro.launch.serve.serve_continuous`).
+
+Reports per-variant tok/s (all emitted tokens / serve wall-clock),
+median wall ms over repeats, dispatch counts, and p50/p99 per-request
+latency.  Emits ``BENCH_serve.json`` (via ``benchmarks/run.py serve``)
+with a ``_meta`` workload stamp; ``--check-against BENCH_serve.json``
+gates CI:
+
+* unconditional same-run invariant: **continuous batching must beat the
+  host-stepped loop on tok/s** (measured back-to-back in one process,
+  so machine speed cancels out), and the resident variants must use
+  strictly fewer host dispatches;
+* stored-file median comparison (speed-factor-normalized like the Faces
+  gate) only when ``_meta`` matches.
+
+Env knobs: SERVE_SLOTS, SERVE_PROMPT, SERVE_MAXNEW, SERVE_REQUESTS,
+SERVE_CHUNK, SERVE_RATE, SERVE_REPEATS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+CHECK_TOLERANCE = 1.20
+
+
+def _cfg_env(name, default, cast=int):
+    return cast(os.environ.get(name, default))
+
+
+def _workload():
+    # decode-heavy on purpose: the dispatch-amortization win lives in
+    # the decode loop, while every admission round re-runs a full-batch
+    # prefill — short prompts + long generations keep the contrast at
+    # the serving regime the paper's offload argument targets
+    return {
+        "slots": _cfg_env("SERVE_SLOTS", 4),
+        "prompt_len": _cfg_env("SERVE_PROMPT", 8),
+        "max_new": _cfg_env("SERVE_MAXNEW", 32),
+        "n_requests": _cfg_env("SERVE_REQUESTS", 12),
+        "chunk": _cfg_env("SERVE_CHUNK", 8),
+        "rate": _cfg_env("SERVE_RATE", 50.0, float),
+        "repeats": _cfg_env("SERVE_REPEATS", 3),
+    }
+
+
+def _tiny_cfg():
+    # dense (non-MoE) on purpose: expert capacity couples batch rows,
+    # which would break the continuous == serial token equality
+    from repro.configs.base import get_config
+    return dataclasses.replace(get_config("qwen1.5-0.5b").smoke(),
+                               name="serve-bench-tiny")
+
+
+def _lockstep(cfg, mesh, eng, params, prompts, arrivals, w, *,
+              device_resident):
+    """Static-batching baseline: wait until ``slots`` requests have
+    arrived, serve the full batch in lockstep, repeat.  Per-request
+    latency is batch completion minus arrival — the tail-latency
+    lockstep the tentpole's continuous batching replaces."""
+    import jax.numpy as jnp
+    from repro.launch.serve import PAD_TOKEN, serve
+
+    n, slots = w["n_requests"], w["slots"]
+    lat, tokens, disp = [], 0, 0
+    t0 = time.time()
+    for lo in range(0, n, slots):
+        rids = list(range(lo, min(lo + slots, n)))
+        # open-loop arrivals: the batch cannot start before its last
+        # member arrives (same trace the continuous variant serves)
+        wait = arrivals[rids[-1]] - (time.time() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        rows = {k: np.asarray(v)[rids] for k, v in prompts.items()}
+        if len(rids) < slots:   # ragged tail batch: pad with repeats
+            pad = [rids[-1]] * (slots - len(rids))
+            rows = {k: np.concatenate([v, np.asarray(prompts[k])[pad]])
+                    for k, v in rows.items()}
+        batch_in = {k: jnp.asarray(v) for k, v in rows.items()}
+        gen, st = serve(cfg, mesh, batch=slots, prompt_len=w["prompt_len"],
+                        gen_len=w["max_new"], params=params,
+                        batch_in=batch_in, engine=eng,
+                        device_resident=device_resident)
+        t_done = time.time() - t0
+        tokens += int((gen[:len(rids)] != PAD_TOKEN).sum())
+        disp += st["dispatches"]
+        lat += [t_done - arrivals[r] for r in rids]
+    total_s = time.time() - t0
+    return {"total_s": total_s, "total_tokens": tokens,
+            "tok_per_s": tokens / max(total_s, 1e-9),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "dispatches": disp}
+
+
+def run_all() -> List[Dict]:
+    import jax
+    from repro.launch.serve import ServeEngine, serve_continuous, \
+        synthetic_batch, poisson_arrivals
+    from repro.parallel import make_mesh
+
+    w = _workload()
+    cfg = _tiny_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = ServeEngine(cfg, mesh, slots=w["slots"],
+                      prompt_len=w["prompt_len"], max_new=w["max_new"],
+                      chunk=w["chunk"], eos_id=-1)
+    # lockstep variants decode the whole budget in one chunk
+    eng_full = ServeEngine(cfg, mesh, slots=w["slots"],
+                           prompt_len=w["prompt_len"], max_new=w["max_new"],
+                           chunk=w["max_new"] - 1, eos_id=-1)
+    with mesh:
+        params, _ = eng.model.init(jax.random.PRNGKey(0))
+        params = jax.device_put(params, eng.pre.in_shardings[0])
+    rng = np.random.RandomState(0)
+    prompts = synthetic_batch(cfg, rng, w["n_requests"], w["prompt_len"])
+    arrivals = poisson_arrivals(w["n_requests"], w["rate"],
+                                np.random.RandomState(1))
+
+    def run_continuous():
+        res, st = serve_continuous(
+            cfg, mesh, slots=w["slots"], prompt_len=w["prompt_len"],
+            max_new=w["max_new"], n_requests=w["n_requests"],
+            chunk=w["chunk"], arrival_rate=w["rate"], seed=0,
+            params=params, prompts=prompts, engine=eng)
+        assert all(len(r.tokens) == w["max_new"] for r in res)
+        return st
+
+    variants = {
+        "host_stepped": lambda: _lockstep(cfg, mesh, eng_full, params,
+                                          prompts, arrivals, w,
+                                          device_resident=False),
+        "resident": lambda: _lockstep(cfg, mesh, eng_full, params,
+                                      prompts, arrivals, w,
+                                      device_resident=True),
+        "continuous": run_continuous,
+    }
+
+    print(f"\n== serve bench == workload {w}")
+    results = []
+    for name, fn in variants.items():
+        fn()                              # warm-up: compile outside timing
+        runs = [fn() for _ in range(w["repeats"])]
+        med = sorted(runs, key=lambda r: r["total_s"])[len(runs) // 2]
+        row = {
+            "bench": "serve", "variant": name,
+            "us_per_call": med["total_s"] * 1e6 / med["total_tokens"],
+            "median_ms": med["total_s"] * 1e3,
+            "tok_per_s": round(med["tok_per_s"], 2),
+            "dispatches": med["dispatches"],
+            "p50_ms": round(med["p50_ms"], 2),
+            "p99_ms": round(med["p99_ms"], 2),
+            "derived": (f"tok_per_s={med['tok_per_s']:.1f};"
+                        f"dispatches={med['dispatches']};"
+                        f"p50_ms={med['p50_ms']:.1f};"
+                        f"p99_ms={med['p99_ms']:.1f}"),
+        }
+        results.append(row)
+        print(f"  {name:13s} {med['tok_per_s']:8.1f} tok/s  "
+              f"{med['total_s']*1e3:8.1f} ms  "
+              f"dispatches={med['dispatches']:3d}  "
+              f"p50={med['p50_ms']:7.1f}ms p99={med['p99_ms']:7.1f}ms")
+
+    by = {r["variant"]: r for r in results}
+    speedup = by["continuous"]["tok_per_s"] / by["host_stepped"]["tok_per_s"]
+    print(f"  continuous vs host_stepped: x{speedup:.2f} tok/s "
+          f"({by['host_stepped']['dispatches']} -> "
+          f"{by['continuous']['dispatches']} dispatches)")
+    return results
+
+
+def collect(results: List[Dict]) -> Dict:
+    """BENCH_serve.json payload from run_all() rows."""
+    out = {
+        f"{r['bench']}/{r['variant']}": {
+            "median_ms": round(r["median_ms"], 4),
+            "tok_per_s": r["tok_per_s"],
+            "dispatches": r["dispatches"],
+            "p50_ms": r["p50_ms"],
+            "p99_ms": r["p99_ms"],
+        }
+        for r in results if r["bench"] == "serve"
+    }
+    if out:
+        w = _workload()
+        out["_meta"] = {k: w[k] for k in
+                        ("slots", "prompt_len", "max_new", "n_requests",
+                         "chunk", "rate", "repeats")}
+    return out
+
+
+def check_against(fresh: Dict, path: str) -> int:
+    """Serve perf gate (cf. the Faces gate in benchmarks/run.py).
+
+    Same-run invariants are unconditional — the variants are measured
+    back-to-back in one process, so machine speed cancels out:
+
+    * continuous batching beats the host-stepped loop on tok/s (the
+      acceptance criterion of the device-resident serving PR);
+    * the device-resident variants use strictly fewer host dispatches
+      than one-dispatch-per-token.
+
+    Stored medians are only compared when the ``_meta`` workload stamp
+    matches, normalized by the run-wide speed factor.
+    """
+    with open(path) as f:
+        stored = json.load(f)
+
+    failures = []
+    cont = fresh.get("serve/continuous")
+    host = fresh.get("serve/host_stepped")
+    resi = fresh.get("serve/resident")
+    if cont and host and cont["tok_per_s"] <= host["tok_per_s"]:
+        failures.append(
+            f"serve/continuous ({cont['tok_per_s']:.1f} tok/s) does not "
+            f"beat serve/host_stepped ({host['tok_per_s']:.1f} tok/s): "
+            f"device-resident continuous batching must win")
+    for key, row in (("serve/continuous", cont), ("serve/resident", resi)):
+        if row and host and row["dispatches"] >= host["dispatches"]:
+            failures.append(
+                f"{key} uses {row['dispatches']} dispatches vs "
+                f"host_stepped's {host['dispatches']}: the resident path "
+                f"must collapse the dispatch count")
+
+    stored_meta = stored.get("_meta", {})
+    if not stored_meta:
+        print("note: recorded file has no _meta stamp — median checks "
+              "skipped (invariants only)")
+        compare = False
+    elif stored_meta != fresh.get("_meta", {}):
+        print(f"note: workload differs from recorded ({fresh.get('_meta')} "
+              f"vs {stored_meta}) — median checks skipped, invariants "
+              f"enforced")
+        compare = False
+    else:
+        compare = True
+
+    if compare:
+        keys = [k for k in fresh if not k.startswith("_")
+                and isinstance(stored.get(k), dict)
+                and stored[k].get("median_ms")]
+        ratios = sorted(fresh[k]["median_ms"] / stored[k]["median_ms"]
+                        for k in keys)
+        speed = ratios[len(ratios) // 2] if ratios else 1.0
+        for k in keys:
+            bound = stored[k]["median_ms"] * speed * CHECK_TOLERANCE
+            if fresh[k]["median_ms"] > bound:
+                failures.append(
+                    f"{k}: median {fresh[k]['median_ms']:.1f}ms vs recorded "
+                    f"{stored[k]['median_ms']:.1f}ms x speed {speed:.2f} "
+                    f"(>{(CHECK_TOLERANCE-1)*100:.0f}% regression)")
+
+    if failures:
+        print(f"\nSERVE PERF GATE FAILED ({len(failures)}):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nserve perf gate OK: continuous beats host-stepped tok/s; "
+          "resident dispatch counts collapsed"
+          + ("; medians within tolerance" if compare else ""))
+    return 0

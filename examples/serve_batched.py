@@ -1,8 +1,15 @@
-"""Batched serving example: prefill + greedy decode with KV caches.
+"""Batched serving example: device-resident decode + continuous batching.
 
 Serves a small gemma3-family model (sliding-window + global layers,
-tied embeddings) for a batch of 8 requests on a 2×2 mesh — the same
-prefill_step/serve_step the 256-chip dry-run lowers.
+tied embeddings) on a 2×2 mesh — the same prefill_step/serve_step the
+256-chip dry-run lowers — twice:
+
+1. a fixed batch of 8, with the whole greedy-decode loop running as ONE
+   host dispatch (vs. the legacy one-dispatch-per-token loop, shown for
+   contrast);
+2. an open-loop stream of 12 requests continuously batched into 4 cache
+   slots: freed slots are re-prefilled for waiting requests inside the
+   in-flight decode dispatch (composed prefill+decode).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -13,7 +20,7 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import dataclasses
 
 from repro.configs.base import get_config
-from repro.launch.serve import serve
+from repro.launch.serve import serve, serve_continuous
 from repro.parallel import make_mesh
 
 cfg = dataclasses.replace(
@@ -24,7 +31,22 @@ cfg = dataclasses.replace(
     dtype="float32", param_dtype="float32", scan_layers=False, remat="none",
 )
 mesh = make_mesh((2, 2), ("data", "model"))
-gen, stats = serve(cfg, mesh, batch=8, prompt_len=64, gen_len=32)
-print("generated (first request):", gen[0][:16], "...")
-print(f"prefill {stats['prefill_s']:.2f}s | decode {stats['decode_s']:.2f}s "
-      f"| {stats['tok_per_s']:.1f} tok/s")
+
+for resident in (True, False):
+    gen, stats = serve(cfg, mesh, batch=8, prompt_len=64, gen_len=32,
+                       device_resident=resident)
+    mode = "resident " if resident else "host-step"
+    print(f"[{mode}] generated (first request):", gen[0][:8], "...")
+    print(f"[{mode}] prefill {stats['prefill_s']:.2f}s | "
+          f"decode {stats['decode_s']:.2f}s | "
+          f"{stats['tok_per_s']:.1f} tok/s | "
+          f"decode dispatches: {stats['decode_dispatches']}")
+
+results, stats = serve_continuous(
+    cfg, mesh, slots=4, prompt_len=64, max_new=32, n_requests=12,
+    chunk=8, arrival_rate=100.0, seed=0)
+print(f"[continuous] {len(results)} requests, {stats['total_tokens']} tokens "
+      f"in {stats['total_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s)")
+print(f"[continuous] p50 {stats['p50_ms']:.0f}ms p99 {stats['p99_ms']:.0f}ms | "
+      f"{stats['dispatches']} dispatches "
+      f"({stats['admit_dispatches']} composed prefill+decode)")

@@ -11,7 +11,13 @@ queues composed (`repro.core.schedule.compose`) into ONE dispatch,
 fixed-count and per-program-predicate variants, checked against
 independent per-queue runs — plus the LINKED composition
 (exchange=True cross-program channels), checked bit-for-bit against
-the single-queue full-domain run."""
+the single-queue full-domain run.
+
+``--serve`` smokes the device-resident serving path
+(`repro.launch.serve`): greedy decode for a fixed-length batch as ONE
+host dispatch, bit-identical to the host-stepped loop; per-sequence EOS
+masking; and continuous-batching admission (composed prefill+decode,
+one dispatch per round) against serial serving."""
 import argparse
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -32,6 +38,8 @@ args.add_argument("--converge", action="store_true",
                   help="also smoke the until-converged while_loop path")
 args.add_argument("--pipeline", action="store_true",
                   help="also smoke the composed 2-queue pipelined dispatch")
+args.add_argument("--serve", action="store_true",
+                  help="also smoke the device-resident serving path")
 args = args.parse_args()
 
 N = 5
@@ -139,5 +147,60 @@ if args.pipeline:
         print(f"pipelined[linked n={n_parts}] OK bit-identical to "
               f"full-domain, dispatches=1")
     print("PIPELINE SMOKE PASS")
+
+if args.serve:
+    # device-resident serving: fixed-length decode as ONE dispatch,
+    # bit-identical to host-stepped; EOS masking; continuous batching
+    from repro.configs.base import get_config
+    from repro.launch.serve import PAD_TOKEN, ServeEngine, serve, \
+        serve_continuous, synthetic_batch
+    from repro.parallel import make_mesh
+
+    scfg = get_config("qwen1.5-0.5b").smoke()   # dense on purpose
+    smesh = make_mesh((2, 2), ("data", "model"))
+    B, P, G = 4, 8, 6
+    eng = ServeEngine(scfg, smesh, slots=B, prompt_len=P, max_new=G,
+                      chunk=G - 1, eos_id=-1)
+    with smesh:
+        sparams, _ = eng.model.init(jax.random.PRNGKey(0))
+        sparams = jax.device_put(sparams, eng.pre.in_shardings[0])
+    sbatch = synthetic_batch(scfg, np.random.RandomState(0), B, P)
+    gen_d, st_d = serve(scfg, smesh, batch=B, prompt_len=P, gen_len=G,
+                        params=sparams, batch_in=sbatch, engine=eng,
+                        device_resident=True)
+    gen_h, st_h = serve(scfg, smesh, batch=B, prompt_len=P, gen_len=G,
+                        params=sparams, batch_in=sbatch, engine=eng,
+                        device_resident=False)
+    np.testing.assert_array_equal(gen_d, gen_h)
+    assert st_d["decode_dispatches"] == 1 and st_h["decode_dispatches"] == G - 1
+    print(f"serve[resident] OK bit-identical, decode_dispatches="
+          f"{st_d['decode_dispatches']} (host-stepped: "
+          f"{st_h['decode_dispatches']})")
+
+    # EOS masking against the host oracle
+    eos = int(gen_h[0, G // 2])
+    eeng = ServeEngine(scfg, smesh, slots=B, prompt_len=P, max_new=G,
+                       chunk=G - 1, eos_id=eos)
+    egen_d, _ = serve(scfg, smesh, batch=B, prompt_len=P, gen_len=G,
+                      params=sparams, batch_in=sbatch, engine=eeng,
+                      device_resident=True, eos_id=eos)
+    egen_h, _ = serve(scfg, smesh, batch=B, prompt_len=P, gen_len=G,
+                      params=sparams, batch_in=sbatch, engine=eeng,
+                      device_resident=False, eos_id=eos)
+    np.testing.assert_array_equal(egen_d, egen_h)
+    assert (egen_d == PAD_TOKEN).any()
+    print(f"serve[eos={eos}] OK masked tokens match the host oracle")
+
+    # continuous batching: admission never dispatches prefill alone
+    res, st = serve_continuous(scfg, smesh, slots=2, prompt_len=P,
+                               max_new=G, n_requests=5, chunk=3,
+                               arrival_rate=0.0, seed=0)
+    assert len(res) == 5 and all(len(r.tokens) == G for r in res)
+    assert st["prefill_dispatches"] == 0
+    assert st["dispatches"] == st["admit_dispatches"] + st["decode_dispatches"]
+    print(f"serve[continuous] OK {st['dispatches']} dispatches "
+          f"({st['admit_dispatches']} composed prefill+decode), "
+          f"{st['total_tokens']} tokens")
+    print("SERVE SMOKE PASS")
 
 print("PERSISTENT SMOKE PASS")

@@ -99,6 +99,14 @@ frozen program's own buffers are discarded by its mask).  Linked
 neighbors therefore see a converged part as a constant boundary
 condition, not stale in-flight data.
 
+The same masked-loop idiom also runs at *per-sequence* grain: the
+serving engine (:class:`repro.launch.serve.ServeEngine`) decodes a
+batch of requests as one resident ``while_loop`` whose per-sequence
+active flags freeze a finished request's cache position (EOS/budget/
+capacity termination) exactly as the per-program flags here freeze a
+converged program's buffers — with masked per-slot *re-admission*
+(``Model.select_slots``) layered on top for continuous batching.
+
 Dispatch accounting
 -------------------
 ``stats`` is a :class:`~repro.core.engine_host.HostStats`: one call =

@@ -28,6 +28,13 @@ MPIX_Enqueue_wait       ``queue.enqueue_wait()``
                         ``(axis, permutation)`` and lowered to ONE fused
                         by-axis transfer each (26 → ≤6 collectives per
                         start gate for direct26), bit-identical deposits
+(ML serving face)       ``repro.launch.serve.ServeEngine``: greedy decode
+                        as a device-resident masked while_loop (ONE host
+                        dispatch per chunk, per-sequence EOS/max-len
+                        termination — the per-program ``n_done`` idiom at
+                        per-sequence grain), continuous-batching admission
+                        as a composed prefill+decode dispatch, cache slots
+                        recycled via donation (zero-copy rotation)
 =====================   =====================================================
 
 All enqueue operations are **non-blocking descriptor appends** — nothing

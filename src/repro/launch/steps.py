@@ -159,8 +159,9 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 # --------------------------------------------------------------------------
 
 
-def _cache_shardings(caches_sd, model: Model, rules: LogicalRules, mesh: Mesh):
-    axes = model.cache_axes()
+def _cache_shardings(caches_sd, model: Model, rules: LogicalRules, mesh: Mesh,
+                     per_seq_pos: bool = False):
+    axes = model.cache_axes(per_sequence=per_seq_pos)
     return jax.tree.map(
         lambda sd, a: NamedSharding(
             mesh, logical_spec_sized(sd.shape, a, rules, mesh)),
@@ -218,7 +219,11 @@ def _prefill_out_cache_shardings(cache_shardings):
 
 
 def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-                     serve_window: int = 0) -> StepBundle:
+                     serve_window: int = 0,
+                     per_seq_pos: bool = False) -> StepBundle:
+    """Decode-step bundle.  ``per_seq_pos=True`` sizes the caches with a
+    [batch] position vector (each slot at its own depth) — required by
+    the continuous-batching serve path (:mod:`repro.launch.serve`)."""
     assert shape.kind == "decode"
     rules = rules_for(shape)
     model = Model(cfg)
@@ -227,8 +232,10 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     param_shardings = _tree_shardings(params_sd, axes, rules, mesh)
 
     B, S = shape.global_batch, shape.seq_len
-    caches_sd = jax.eval_shape(lambda: model.init_caches(B, S))
-    cache_shardings = _cache_shardings(caches_sd, model, rules, mesh)
+    caches_sd = jax.eval_shape(
+        lambda: model.init_caches(B, S, per_sequence=per_seq_pos))
+    cache_shardings = _cache_shardings(caches_sd, model, rules, mesh,
+                                       per_seq_pos=per_seq_pos)
 
     token_sh = NamedSharding(mesh, logical_spec_sized((B,), ("batch",),
                                                        rules, mesh))

@@ -187,20 +187,54 @@ class Model:
 
     # -- serving ----------------------------------------------------------------
 
-    def init_caches(self, batch: int, max_len: int) -> Dict[str, Any]:
+    def init_caches(self, batch: int, max_len: int,
+                    per_sequence: bool = False) -> Dict[str, Any]:
+        """Zeroed decode caches.  With ``per_sequence=True`` the write
+        position ``pos`` is a [batch] vector instead of a scalar — every
+        cache slot sits at its own depth, which is what lets the
+        continuous-batching serve path admit a new request into a freed
+        slot while its neighbours are mid-generation."""
         cfg = self.cfg
         segs, pos = tfm.init_caches(cfg, batch, max_len)
+        if per_sequence:
+            pos = jnp.zeros((batch,), jnp.int32)
         out = {"segments": segs, "pos": pos}
         if cfg.enc_dec:
             out["enc_out"] = jnp.zeros(
                 (batch, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
         return out
 
-    def cache_axes(self) -> Dict[str, Any]:
-        out = {"segments": tfm.cache_logical_axes(self.cfg), "pos": ()}
+    def cache_axes(self, per_sequence: bool = False) -> Dict[str, Any]:
+        out = {"segments": tfm.cache_logical_axes(self.cfg),
+               "pos": ("batch",) if per_sequence else ()}
         if self.cfg.enc_dec:
             out["enc_out"] = ("batch", None, "act_embed")
         return out
+
+    def select_slots(self, mask, new_caches, old_caches) -> Dict[str, Any]:
+        """Per-slot cache merge: slot b takes ``new_caches`` where
+        ``mask[b]`` and keeps ``old_caches`` otherwise.
+
+        The serve-path analogue of the composed scheduler's per-program
+        masked state update (:func:`repro.core.engine_persistent.
+        _run_schedule_while`): each cache leaf's batch axis is looked up
+        in :meth:`cache_axes` and the mask broadcast along it, so a
+        frozen (still-decoding) slot's K/V, SSM state and position are
+        untouched while an admitted slot takes the freshly prefilled
+        values — zero-copy for XLA (a select, no gather/scatter)."""
+        axes = self.cache_axes(
+            per_sequence=getattr(old_caches["pos"], "ndim", 0) == 1)
+
+        def sel(ax, n, o):
+            b = ax.index("batch")
+            shape = [1] * n.ndim
+            shape[b] = mask.shape[0]
+            return jnp.where(mask.reshape(shape), n, o)
+
+        return jax.tree.map(
+            sel, axes, new_caches, old_caches,
+            is_leaf=lambda x: isinstance(x, tuple) and not any(
+                hasattr(e, "shape") for e in x))
 
     def prefill(self, params, batch, caches, *, serve_window: int = 0):
         """Write the prompt into the caches; returns (last_logits, caches)."""
@@ -213,7 +247,9 @@ class Model:
         if cfg.frontend == "vision":
             prefix = apply_frontend(params["frontend"], batch["vision_embeds"], cfg)
         x = self._embed_tokens(params, tokens, prefix_embeds=prefix)
-        positions = jnp.arange(x.shape[1]) + caches["pos"]
+        pos = caches["pos"]
+        positions = (jnp.arange(x.shape[1]) + pos if pos.ndim == 0
+                     else jnp.arange(x.shape[1])[None] + pos[:, None])
         x, new_segs, _ = tfm.apply_stack(
             params["decoder"], x, cfg, decoder=True, causal=True,
             positions=positions, caches=caches["segments"],
@@ -228,13 +264,18 @@ class Model:
         return logits, out
 
     def decode_step(self, params, caches, token, *, serve_window: int = 0):
-        """One-token decode against the cache.  token: [B] int32."""
+        """One-token decode against the cache.  token: [B] int32.
+
+        ``caches["pos"]`` may be a scalar (whole batch at one depth) or
+        a [B] vector (per-sequence slot depths — continuous batching)."""
         cfg = self.cfg
+        pos = caches["pos"]
         x = apply_embedding(params["embed"], token[:, None], cfg)
         if cfg.pos_embedding == "sinusoidal":
-            # sinusoidal embedding at the (traced) cache position
-            x = x + _sinusoid_at(caches["pos"], cfg.d_model, x.dtype)[None, None]
-        positions = caches["pos"][None]
+            # sinusoidal embedding at the (traced) cache position(s)
+            s = _sinusoid_at(pos, cfg.d_model, x.dtype)
+            x = x + (s[None, None] if s.ndim == 1 else s[:, None])
+        positions = pos[None] if pos.ndim == 0 else pos[:, None]
         x, new_segs, _ = tfm.apply_stack(
             params["decoder"], x, cfg, decoder=True, causal=True,
             positions=positions, caches=caches["segments"],
@@ -286,8 +327,9 @@ def _merge_caches(old_segs: List, new_segs: List) -> List:
 
 
 def _sinusoid_at(pos, d, dtype):
+    """pos scalar → [d]; pos [B] (per-sequence depths) → [B, d]."""
     dim = jnp.arange(d // 2, dtype=jnp.float32)
-    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    ang = pos.astype(jnp.float32)[..., None] / jnp.power(10000.0, 2 * dim / d)
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
 
 

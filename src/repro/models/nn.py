@@ -233,11 +233,34 @@ def _headwise_rms(x, scale, eps):
             (scale.astype(jnp.float32) + 1.0)).astype(x.dtype)
 
 
+def _attn_mask(*, T, causal, window, q_pos, k_valid):
+    """Validity × causal × window mask, batch-aware.
+
+    ``q_pos`` may be [S] (positions shared across the batch) or [B,S]
+    (per-sequence positions — the continuous-batching serve path, where
+    every cache slot sits at its own depth); ``k_valid`` likewise scalar
+    or [B].  Returns [b?,S,T] with b? ∈ {1,B} so it broadcasts against
+    [B,H,S,T] logits either way — the shared-position path lowers to
+    exactly the pre-batched mask values.
+    """
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None]            # [b?,S]
+    kv = jnp.asarray(k_valid)
+    kv = kv if kv.ndim == 1 else kv[None]                     # [b?]
+    kpos = jnp.arange(T)
+    mask = kpos[None, None, :] < kv[:, None, None]            # [b?,1,T]
+    if causal:
+        mask = mask & (kpos[None, None, :] <= qp[:, :, None])
+    mask = mask & jnp.where(
+        window > 0, kpos[None, None, :] > (qp[:, :, None] - window), True)
+    return mask
+
+
 def _sdpa(q, k, v, *, scale, causal, window, softcap, q_pos, k_valid):
     """q: [B,S,H,D]; k/v: [B,T,Hkv,D]; window/theta may be traced.
 
-    ``window``: 0 → full attention.  ``q_pos``: [S] global positions.
-    ``k_valid``: number of valid cache entries (traced ok).
+    ``window``: 0 → full attention.  ``q_pos``: [S] or [B,S] global
+    positions.  ``k_valid``: number of valid cache entries (traced ok,
+    scalar or per-sequence [B]).
     """
     B, S, Hq, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
@@ -259,16 +282,23 @@ def _sdpa(q, k, v, *, scale, causal, window, softcap, q_pos, k_valid):
                            "batch", None, None, None)
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
-    kpos = jnp.arange(T)
-    mask = kpos[None, :] < k_valid
-    if causal:
-        mask = mask & (kpos[None, :] <= q_pos[:, None])
-    mask = mask & jnp.where(
-        window > 0, kpos[None, :] > (q_pos[:, None] - window), True)
-    logits = jnp.where(mask[None, None], logits, -1e30)
+    mask = _attn_mask(T=T, causal=causal, window=window,
+                      q_pos=q_pos, k_valid=k_valid)
+    logits = jnp.where(mask[:, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", probs, vr)
     return act_shard(out.astype(q.dtype), *_attn_axes(Hq))
+
+
+def _cache_write(cache_buf, val, pos):
+    """Write ``val`` [B,S,...] into ``cache_buf`` [B,T,...] at sequence
+    offset ``pos`` — scalar (one depth for the whole batch) or [B]
+    (per-sequence slot depths; each row updates at its own offset)."""
+    if getattr(pos, "ndim", 0) == 1:
+        return jax.vmap(
+            lambda c, v, p: jax.lax.dynamic_update_slice_in_dim(
+                c, v, p, axis=0))(cache_buf, val, pos)
+    return jax.lax.dynamic_update_slice_in_dim(cache_buf, val, pos, axis=1)
 
 
 def apply_attention(
@@ -276,7 +306,7 @@ def apply_attention(
     causal: bool = True,
     window=0,                 # static int or traced scalar; 0 → full
     rope_theta=None,          # static float or traced scalar
-    positions=None,           # [S] global positions of x tokens
+    positions=None,           # [S] or [B,S] global positions of x tokens
     cache: Optional[Dict] = None,   # {"k","v","pos"} decode cache (updated)
     kv_x: Optional[jax.Array] = None,  # cross-attention source
 ):
@@ -318,10 +348,12 @@ def apply_attention(
 
     new_cache = None
     if cache is not None and kv_x is None:
-        # write this step's K/V at cache position(s)
+        # write this step's K/V at cache position(s) — pos may be a
+        # scalar (whole batch at one depth) or [B] (per-sequence slot
+        # positions, the continuous-batching serve path)
         pos = cache["pos"]
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        ck = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos)
+        cv = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos)
         k, v = ck, cv
         k_valid = pos + S
         new_cache = {"k": ck, "v": cv}
@@ -387,10 +419,9 @@ def _apply_mla(p, x, cfg: ModelConfig, *, window, rope_theta, positions,
     scale = (dn + dr) ** -0.5
     if cache is not None:
         pos = cache["pos"]
-        cc = jax.lax.dynamic_update_slice_in_dim(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, axis=1)
-        cr = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), pos, axis=1)
+        cc = _cache_write(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos)
+        cr = _cache_write(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                          pos)
         k_valid = pos + S
         # absorbed decode path: score in compressed space
         wkv_b_k = p["wkv_b"].astype(dt)[..., :dn]      # [kl, h, dn]
@@ -401,12 +432,9 @@ def _apply_mla(p, x, cfg: ModelConfig, *, window, rope_theta, positions,
                              cc.astype(jnp.float32))
                   + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32),
                                cr.astype(jnp.float32))) * scale
-        kpos = jnp.arange(T)
-        mask = kpos[None, :] < k_valid
-        if causal:
-            mask = mask & (kpos[None, :] <= positions[:, None])
-        mask = mask & jnp.where(window > 0, kpos[None, :] > (positions[:, None] - window), True)
-        logits = jnp.where(mask[None, None], logits, -1e30)
+        mask = _attn_mask(T=T, causal=causal, window=window,
+                          q_pos=positions, k_valid=k_valid)
+        logits = jnp.where(mask[:, None], logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         ctx = jnp.einsum("bhst,btr->bshr", probs, cc.astype(jnp.float32)).astype(dt)
         wkv_b_v = p["wkv_b"].astype(dt)[..., dn:]      # [kl, h, dv]

@@ -1,0 +1,208 @@
+"""Serving-path tests (repro.launch.serve).
+
+Covers the device-resident decode contract: the whole greedy-decode
+loop as ONE host dispatch, bit-identical to the host-stepped reference;
+per-sequence EOS masking stopping exactly at the host oracle's stop
+step; continuous-batching admission reproducing serial serving's tokens
+per request; and dispatch accounting for the composed prefill+decode
+admission program.
+
+The model is a dense (non-MoE) smoke config on purpose: MoE expert
+capacity couples batch rows, which would break the continuous == serial
+token equality these tests assert.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.launch.serve import (
+    PAD_TOKEN,
+    ServeEngine,
+    serve,
+    serve_continuous,
+    synthetic_batch,
+)
+from repro.models import Model
+from repro.parallel import make_mesh
+
+PROMPT, GEN = 8, 6
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen1.5-0.5b").smoke()
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def eng4(cfg, mesh):
+    return ServeEngine(cfg, mesh, slots=4, prompt_len=PROMPT, max_new=GEN,
+                       chunk=GEN - 1, eos_id=-1)
+
+
+@pytest.fixture(scope="module")
+def params(cfg, mesh, eng4):
+    with mesh:
+        p, _ = eng4.model.init(jax.random.PRNGKey(0))
+        return jax.device_put(p, eng4.pre.in_shardings[0])
+
+
+@pytest.fixture(scope="module")
+def prompts4(cfg):
+    return synthetic_batch(cfg, np.random.RandomState(0), 4, PROMPT)
+
+
+@pytest.fixture(scope="module")
+def fixed_len(cfg, mesh, eng4, params, prompts4):
+    """(gen, stats) per mode for a fixed-length batch-of-4 serve."""
+    out = {}
+    for mode in (True, False):
+        out[mode] = serve(cfg, mesh, batch=4, prompt_len=PROMPT,
+                          gen_len=GEN, params=params, batch_in=prompts4,
+                          engine=eng4, device_resident=mode)
+    return out
+
+
+class TestDeviceResident:
+    def test_bit_identical_to_host_stepped(self, fixed_len):
+        gen_d, _ = fixed_len[True]
+        gen_h, _ = fixed_len[False]
+        np.testing.assert_array_equal(gen_d, gen_h)
+        assert gen_d.shape == (4, GEN)
+        assert (gen_d != PAD_TOKEN).all()   # no EOS: everyone runs to length
+
+    def test_fixed_length_is_one_dispatch(self, fixed_len):
+        _, st_d = fixed_len[True]
+        # the whole decode loop is ONE host dispatch (plus the jitted
+        # prefill): the serve-path analogue of the persistent engine
+        assert st_d["decode_dispatches"] == 1
+        assert st_d["dispatches"] == 2
+        assert st_d["sync_points"] == 1
+
+    def test_host_stepped_dispatch_count(self, fixed_len):
+        _, st_h = fixed_len[False]
+        assert st_h["decode_dispatches"] == GEN - 1
+        assert st_h["dispatches"] == GEN  # prefill + one per decode token
+
+    def test_token_accounting(self, fixed_len):
+        for mode in (True, False):
+            _, st = fixed_len[mode]
+            assert st["decode_tokens"] == 4 * (GEN - 1)
+
+
+class TestEosMasking:
+    @pytest.fixture(scope="class")
+    def eos_runs(self, cfg, mesh, params, prompts4, fixed_len):
+        gen_h, _ = fixed_len[False]
+        # an EOS id that actually occurs mid-stream in the oracle run
+        eos = int(gen_h[0, GEN // 2])
+        eng = ServeEngine(cfg, mesh, slots=4, prompt_len=PROMPT,
+                          max_new=GEN, chunk=GEN - 1, eos_id=eos)
+        runs = {mode: serve(cfg, mesh, batch=4, prompt_len=PROMPT,
+                            gen_len=GEN, params=params, batch_in=prompts4,
+                            engine=eng, device_resident=mode, eos_id=eos)
+                for mode in (True, False)}
+        return eos, gen_h, runs
+
+    def test_device_matches_host_oracle(self, eos_runs):
+        _, _, runs = eos_runs
+        np.testing.assert_array_equal(runs[True][0], runs[False][0])
+
+    def test_stops_exactly_at_oracle_stop_step(self, eos_runs):
+        eos, gen_h, runs = eos_runs
+        gen_d, _ = runs[True]
+        for b in range(4):
+            hits = np.nonzero(gen_h[b] == eos)[0]
+            stop = int(hits[0]) + 1 if hits.size else GEN
+            # emissions match the unmasked oracle up to and incl. EOS...
+            np.testing.assert_array_equal(gen_d[b, :stop], gen_h[b, :stop])
+            # ...and the slot is frozen (PAD) past its stop step
+            assert (gen_d[b, stop:] == PAD_TOKEN).all()
+
+    def test_emitted_token_count_reflects_early_eos(self, eos_runs):
+        _, _, runs = eos_runs
+        gen_d, st = runs[True]
+        emitted = int((gen_d[:, 1:] != PAD_TOKEN).sum())
+        assert st["decode_tokens"] == emitted
+        assert emitted < 4 * (GEN - 1)   # at least one row stopped early
+
+
+class TestContinuousBatching:
+    @pytest.fixture(scope="class")
+    def continuous(self, cfg, mesh):
+        n, slots, chunk = 5, 2, 3
+        eng = ServeEngine(cfg, mesh, slots=slots, prompt_len=PROMPT,
+                          max_new=GEN, chunk=chunk, eos_id=-1)
+        with mesh:
+            params, _ = eng.model.init(jax.random.PRNGKey(0))
+            params = jax.device_put(params, eng.pre.in_shardings[0])
+        prompts = synthetic_batch(cfg, np.random.RandomState(1), n, PROMPT)
+        results, stats = serve_continuous(
+            cfg, mesh, slots=slots, prompt_len=PROMPT, max_new=GEN,
+            n_requests=n, chunk=chunk, arrival_rate=0.0, seed=0,
+            params=params, prompts=prompts, engine=eng)
+        return n, params, prompts, results, stats
+
+    def test_tokens_match_serial_serving(self, cfg, mesh, continuous):
+        n, params, prompts, results, _ = continuous
+        # serial reference: each request served entirely alone (batch=1,
+        # host-stepped) — admission into a shared running batch must not
+        # change a single emitted token
+        eng1 = ServeEngine(cfg, mesh, slots=1, prompt_len=PROMPT,
+                           max_new=GEN, chunk=GEN - 1, eos_id=-1)
+        p1 = jax.device_put(params, eng1.pre.in_shardings[0])
+        for r in results:
+            row = {k: jnp.asarray(np.asarray(v)[r.rid:r.rid + 1])
+                   for k, v in prompts.items()}
+            gen, _ = serve(cfg, mesh, batch=1, prompt_len=PROMPT,
+                           gen_len=GEN, params=p1, batch_in=row,
+                           engine=eng1, device_resident=False)
+            np.testing.assert_array_equal(r.tokens, gen[0])
+
+    def test_all_requests_complete_full_budget(self, continuous):
+        n, _, _, results, stats = continuous
+        assert len(results) == n
+        assert all(len(r.tokens) == GEN for r in results)
+        assert stats["total_tokens"] == n * GEN
+
+    def test_composed_admission_is_one_dispatch(self, continuous):
+        _, _, _, _, stats = continuous
+        # prefill never runs as its own dispatch: admission rounds are
+        # the composed prefill+decode program, ONE dispatch each
+        assert stats["prefill_dispatches"] == 0
+        assert stats["admit_dispatches"] >= 1
+        assert stats["dispatches"] == (stats["admit_dispatches"]
+                                       + stats["decode_dispatches"])
+        # one host sync per round — the admission point
+        assert stats["sync_points"] == stats["dispatches"]
+
+
+class TestSelectSlots:
+    def test_masked_merge_per_leaf(self, cfg):
+        model = Model(cfg)
+        old = model.init_caches(3, 16, per_sequence=True)
+        new = jax.tree.map(lambda x: jnp.ones_like(x), old)
+        mask = jnp.asarray([True, False, True])
+        merged = model.select_slots(mask, new, old)
+        axes = model.cache_axes(per_sequence=True)
+
+        def check(ax, m, o):
+            b = ax.index("batch")
+            m_np, o_np = np.asarray(m), np.asarray(o)
+            for s, keep_new in enumerate([True, False, True]):
+                got = np.take(m_np, s, axis=b)
+                want = (np.ones_like(got) if keep_new
+                        else np.take(o_np, s, axis=b))
+                np.testing.assert_array_equal(got, want)
+
+        jax.tree.map(check, axes, merged, old,
+                     is_leaf=lambda x: isinstance(x, tuple) and not any(
+                         hasattr(e, "shape") for e in x))

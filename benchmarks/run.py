@@ -95,10 +95,11 @@ def check_against(faces: dict, path: str) -> int:
             bound = stored[key]["median_ms"] * speed * CHECK_TOLERANCE
             if fresh["median_ms"] > bound:
                 failures.append(
-                    f"{key}: median {fresh['median_ms']:.1f}ms vs recorded "
+                    f"{key}: median {fresh['median_ms']:.1f}ms > bound "
+                    f"{bound:.1f}ms (recorded "
                     f"{stored[key]['median_ms']:.1f}ms x run speed-factor "
-                    f"{speed:.2f} (>{(CHECK_TOLERANCE-1)*100:.0f}% "
-                    f"regression)")
+                    f"{speed:.2f} x tolerance {CHECK_TOLERANCE:.2f}: "
+                    f">{(CHECK_TOLERANCE-1)*100:.0f}% regression)")
     # absolute same-run invariants: these pairs are measured back-to-back
     # in one process, so machine speed and loop settings cancel out
     pers = faces.get("faces_figP/persistent")
@@ -116,9 +117,14 @@ def check_against(faces: dict, path: str) -> int:
             f"than untuned st_offload ({offl['median_ms']:.1f}ms): the "
             f"auto-tuner must never publish a slower number")
     if failures:
-        print(f"\nPERF GATE FAILED ({len(failures)}):")
+        # stderr + flush: the non-zero exit must never be near-silent in
+        # CI logs — name every failing row, then a one-line summary
+        print(f"\nPERF GATE FAILED ({len(failures)} failing row(s)):",
+              file=sys.stderr, flush=True)
         for msg in failures:
-            print(f"  - {msg}")
+            print(f"  - {msg}", file=sys.stderr, flush=True)
+        names = ", ".join(msg.split(":", 1)[0] for msg in failures)
+        print(f"PERF GATE FAILED rows: {names}", file=sys.stderr, flush=True)
         return 1
     checked = sum(1 for k in faces if tracked(k)) if compare_medians else 0
     print(f"\nperf gate OK: {checked} tracked medians within "

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import sys
 import time
 from typing import Dict, List
 
@@ -266,14 +267,22 @@ def check_against(fresh: Dict, path: str) -> int:
             bound = stored[k]["median_ms"] * speed * CHECK_TOLERANCE
             if fresh[k]["median_ms"] > bound:
                 failures.append(
-                    f"{k}: median {fresh[k]['median_ms']:.1f}ms vs recorded "
+                    f"{k}: median {fresh[k]['median_ms']:.1f}ms > bound "
+                    f"{bound:.1f}ms (recorded "
                     f"{stored[k]['median_ms']:.1f}ms x speed {speed:.2f} "
-                    f"(>{(CHECK_TOLERANCE-1)*100:.0f}% regression)")
+                    f"x tolerance {CHECK_TOLERANCE:.2f}: "
+                    f">{(CHECK_TOLERANCE-1)*100:.0f}% regression)")
 
     if failures:
-        print(f"\nSERVE PERF GATE FAILED ({len(failures)}):")
+        # stderr + flush, mirroring the Faces gate: the non-zero exit
+        # must name every failing row in the CI log
+        print(f"\nSERVE PERF GATE FAILED ({len(failures)} failing row(s)):",
+              file=sys.stderr, flush=True)
         for msg in failures:
-            print(f"  - {msg}")
+            print(f"  - {msg}", file=sys.stderr, flush=True)
+        names = ", ".join(msg.split(":", 1)[0] for msg in failures)
+        print(f"SERVE PERF GATE FAILED rows: {names}", file=sys.stderr,
+              flush=True)
         return 1
     print("\nserve perf gate OK: continuous beats host-stepped tok/s; "
           "resident dispatch counts collapsed"

@@ -1,0 +1,23 @@
+"""repro.analysis — STLint over every shipped benchmark program.
+
+The verifier itself lives in :mod:`repro.core.verify`; this package is
+the *fleet* face: a registry of every ST program the benchmarks build
+(:mod:`.programs`) and a CLI (``python -m repro.analysis``) that lints
+each one and prints a diagnostics table.  CI runs the CLI so a rule
+regression — or a benchmark program that stops linting clean — fails
+the build with a table naming the program, rule, and enqueue site
+instead of a bare non-zero exit.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis            # lint everything
+    PYTHONPATH=src python -m repro.analysis faces      # name filter
+
+Exit status is non-zero if ANY diagnostic is emitted: shipped programs
+must lint clean (acceptance bar), so even a warning-severity finding is
+a regression here.
+"""
+
+from .programs import iter_programs, lint_all
+
+__all__ = ["iter_programs", "lint_all"]

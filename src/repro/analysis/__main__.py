@@ -1,0 +1,53 @@
+"""``python -m repro.analysis`` — lint every benchmark-built ST program.
+
+Prints one diagnostics table per program (rule id, severity, pid,
+descriptor index, message, enqueue site) and a final summary line.
+Exit status 0 only if every program lints clean — the CI lint job runs
+exactly this.
+"""
+
+import os
+
+# benchmark grids assume 8 host devices (same default as benchmarks/run.py);
+# must be set before jax initialises
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="STLint every ST program the benchmarks build")
+    ap.add_argument("filter", nargs="?", default="",
+                    help="only lint programs whose name contains this")
+    args = ap.parse_args(argv)
+
+    from repro.core.verify import format_diagnostics
+
+    from .programs import lint_all
+
+    results = [(name, diags) for name, diags in lint_all()
+               if args.filter in name]
+    if not results:
+        print(f"no programs match {args.filter!r}", file=sys.stderr)
+        return 2
+
+    total = 0
+    for name, diags in results:
+        total += len(diags)
+        print(f"== {name}")
+        print(format_diagnostics(diags))
+    dirty = [name for name, diags in results if diags]
+    if dirty:
+        print(f"\nSTLint: {total} diagnostic(s) across "
+              f"{len(dirty)}/{len(results)} program(s): {', '.join(dirty)}",
+              file=sys.stderr)
+        return 1
+    print(f"\nSTLint: {len(results)} program(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

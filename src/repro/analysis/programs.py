@@ -1,0 +1,96 @@
+"""Registry of every ST program the shipped benchmarks build.
+
+Mirrors the builds in ``benchmarks/faces_bench.py`` (figs 8-12 grids,
+the persistent variant, the composed half-grid pipeline, the linked
+N-part full-domain solves) and ``benchmarks/serve_bench.py`` (the
+prefill+decode admission schedule via
+:func:`repro.launch.serve.build_admission_schedule`) — build only, no
+execution, so linting the whole fleet takes seconds.
+
+Benchmark grids assume 8 host devices (``benchmarks/run.py`` forces
+them); when fewer are available the grids scale down to ``(1, 1, 1)``
+so the same registry drives the fast-lane test sweep on the single real
+CPU device.  Program *structure* (batches, counters, links, plans) is
+what the verifier walks, and every structural rule still gets exercised
+at the reduced grid.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Iterator, List, Optional, Tuple
+
+#: benchmark point counts / persistent iteration depth (faces_bench)
+POINTS = (12, 12, 12)
+INNER = 10
+
+
+def _scale(grid: Tuple[int, int, int], device_count: int):
+    need = grid[0] * grid[1] * grid[2]
+    return grid if device_count >= need else (1, 1, 1)
+
+
+def iter_programs(device_count: Optional[int] = None) -> Iterator[Tuple[str, object]]:
+    """Yield ``(name, program)`` for every benchmark-built ST program."""
+    import jax
+
+    from repro.core import (
+        FacesConfig,
+        STLintWarning,
+        build_faces_part_program,
+        build_faces_program,
+        compose,
+        half_config,
+        part_names,
+    )
+    from repro.launch.serve import build_admission_schedule
+    from repro.parallel import make_mesh
+
+    if device_count is None:
+        device_count = jax.device_count()
+
+    with warnings.catch_warnings():
+        # builds run with verify="off"/suppressed warnings: the CLI and
+        # the test sweep collect diagnostics explicitly via
+        # verify_program so a dirty program is REPORTED, not raised
+        # mid-registry (one bad build must not hide the rest)
+        warnings.simplefilter("ignore", STLintWarning)
+
+        grid = _scale((8, 1, 1), device_count)
+        mesh1d = make_mesh(grid, ("gx", "gy", "gz"))
+        cfg1d = FacesConfig(grid=grid, points=POINTS)
+        yield "faces_fig8_1d", build_faces_program(cfg1d, mesh1d)
+
+        grid = _scale((2, 2, 2), device_count)
+        mesh3d = make_mesh(grid, ("gx", "gy", "gz"))
+        cfg3d = FacesConfig(grid=grid, points=POINTS)
+        yield "faces_fig11_3d", build_faces_program(cfg3d, mesh3d)
+        yield ("faces_fig_persistent",
+               build_faces_program(cfg3d, mesh3d).persistent(INNER))
+
+        cfgh = half_config(cfg3d)
+        progA = build_faces_program(cfgh, mesh3d, name="facesA").persistent(INNER)
+        progB = build_faces_program(cfgh, mesh3d, name="facesB").persistent(INNER)
+        yield "faces_pipeline_halves", compose(progA, progB, verify="off")
+
+        for n_parts in (2, 4):
+            names = part_names(n_parts)
+            progs = [
+                build_faces_part_program(cfg3d, mesh3d, k, n_parts,
+                                         names=names).persistent(INNER)
+                for k in range(n_parts)
+            ]
+            yield (f"faces_pipeline_linked_n{n_parts}",
+                   compose(*progs, verify="off"))
+
+        serve_mesh = make_mesh((device_count,), ("x",))
+        yield "serve_admission", build_admission_schedule(serve_mesh,
+                                                          verify="off")
+
+
+def lint_all(device_count: Optional[int] = None) -> List[Tuple[str, list]]:
+    """Lint every registry program; return ``[(name, diagnostics)]``."""
+    from repro.core import verify_program
+
+    return [(name, verify_program(prog))
+            for name, prog in iter_programs(device_count)]

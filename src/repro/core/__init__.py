@@ -15,6 +15,7 @@ The paper's contribution as a composable JAX module:
   banks, round-robin batch interleaving, per-program predicates)
 * :mod:`.halo`         — the Faces 26-neighbor pattern as an ST program
 * :mod:`.overlap`      — decomposed overlap-friendly collectives
+* :mod:`.verify`       — STLint: static verifier + runtime sanitizer
 """
 
 from .counters import (
@@ -74,6 +75,15 @@ from .matching import (
 )
 from .queue import QueueError, STProgram, STQueue, create_queue
 from .schedule import Link, ScheduleError, STSchedule, SubProgram, compose
+from .verify import (
+    Diagnostic,
+    SanitizeError,
+    STLintWarning,
+    VerifyError,
+    format_diagnostics,
+    run_verify,
+    verify_program,
+)
 
 __all__ = [
     "STQueue", "STProgram", "create_queue", "QueueError",
@@ -93,4 +103,6 @@ __all__ = [
     "merge_parts",
     "global_residual_fn",
     "DIRECTIONS", "FACES", "EDGES", "CORNERS",
+    "Diagnostic", "STLintWarning", "VerifyError", "SanitizeError",
+    "verify_program", "run_verify", "format_diagnostics",
 ]

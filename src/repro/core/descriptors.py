@@ -45,6 +45,15 @@ sub-program its own pid so the engines can keep **per-program
 trigger/completion counter banks** — the multi-DWQ analogue of one
 counter pair per ``MPIX_Queue``.
 
+Enqueue-site provenance (``site``)
+----------------------------------
+Every descriptor records the ``file:line`` of the ``enqueue_*`` call
+that created it (captured by :class:`~repro.core.queue.STQueue` via
+``traceback.extract_stack``).  Build/compose/verify errors and
+:class:`~repro.core.verify.Diagnostic` records carry it, so a failure
+in a composed 400-descriptor schedule names the enqueue call at fault
+instead of a bare descriptor index.
+
 Cross-program channels (``remote``)
 -----------------------------------
 ``SendDesc``/``RecvDesc`` additionally carry an optional ``remote``
@@ -210,6 +219,8 @@ class KernelDesc:
     name: str = "kernel"
     # Program identity (multi-queue composition; see module docstring).
     pid: int = 0
+    # Enqueue-site provenance ("file:line"; see module docstring).
+    site: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -225,6 +236,8 @@ class SendDesc:
     # Cross-program channel: name of the peer *program* holding the
     # matching receive (None = matched within this program's own batch).
     remote: Optional[str] = None
+    # Enqueue-site provenance ("file:line"; see module docstring).
+    site: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -241,6 +254,8 @@ class RecvDesc:
     # Cross-program channel: name of the peer *program* holding the
     # matching send (None = matched within this program's own batch).
     remote: Optional[str] = None
+    # Enqueue-site provenance ("file:line"; see module docstring).
+    site: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -254,6 +269,8 @@ class CollDesc:
     kwargs: dict = dataclasses.field(default_factory=dict)
     threshold: int = -1
     pid: int = 0
+    # Enqueue-site provenance ("file:line"; see module docstring).
+    site: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -261,6 +278,8 @@ class StartDesc:
     batch: int  # index of the batch this start triggers
     threshold: int = -1
     pid: int = 0
+    # Enqueue-site provenance ("file:line"; see module docstring).
+    site: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -268,6 +287,8 @@ class WaitDesc:
     batch: int
     expected: int = -1  # completion-counter target
     pid: int = 0
+    # Enqueue-site provenance ("file:line"; see module docstring).
+    site: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -95,6 +95,7 @@ class FusedEngine:
         mode: str = "stream",
         donate: bool = False,
         coalesce: bool = True,
+        sanitize: bool = False,
     ):
         if mode not in ("stream", "dataflow"):
             raise ValueError("mode must be 'stream' or 'dataflow'")
@@ -106,6 +107,10 @@ class FusedEngine:
         # transfers) when present; False forces the per-channel lowering
         # even on a plan-carrying program (A/B benchmarks, parity tests).
         self.coalesce = coalesce
+        # Runtime sanitizer (see repro.core.verify): NaN-canary poisoning
+        # of unwritten message slots + deposit-before-wait assertions
+        # inside the interpreter (SanitizeError at trace time).
+        self.sanitize = sanitize
         self.mesh = program.mesh
         self._mesh_shape = dict(self.mesh.shape)
         self._jitted = None
@@ -164,7 +169,8 @@ class FusedEngine:
 
         body = functools.partial(_run_program, prog=prog, mode=self.mode,
                                  mesh_shape=self._mesh_shape,
-                                 coalesce=self.coalesce)
+                                 coalesce=self.coalesce,
+                                 sanitize=self.sanitize)
         # check_vma=False: Pallas calls inside the program can't declare
         # varying-mesh-axes on their out_shapes; ordering is enforced by
         # the token ties, not by vma tracking.
@@ -181,9 +187,11 @@ class FusedEngine:
 
 def _run_program(mem: Dict[str, jax.Array], *, prog: STProgram, mode: str,
                  mesh_shape: Dict[str, int],
-                 coalesce: bool = True) -> Dict[str, jax.Array]:
+                 coalesce: bool = True,
+                 sanitize: bool = False) -> Dict[str, jax.Array]:
     mem, _, _ = _interpret_program(mem, prog=prog, mode=mode,
-                                   mesh_shape=mesh_shape, coalesce=coalesce)
+                                   mesh_shape=mesh_shape, coalesce=coalesce,
+                                   sanitize=sanitize)
     return mem
 
 
@@ -206,6 +214,7 @@ def _interpret_program(
     tokens: Optional[Dict[int, jax.Array]] = None,
     comp_tokens: Optional[Dict[int, jax.Array]] = None,
     coalesce: bool = True,
+    sanitize: bool = False,
 ) -> Tuple[Dict[str, jax.Array], Dict[int, jax.Array], Dict[int, jax.Array]]:
     """Interpret one pass over ``prog``'s descriptors.
 
@@ -224,8 +233,31 @@ def _interpret_program(
     :class:`~repro.core.matching.CoalescePlan` fires its fused by-axis
     transfers instead of one ppermute per channel; deposits replay in
     the original channel order so results are bit-identical either way.
+
+    ``sanitize`` turns on the runtime sanitizer (see
+    :mod:`repro.core.verify`): message-slot buffers are poisoned with
+    NaN canaries at pass start — a read before the slot's deposit lands
+    surfaces as NaNs instead of silently-stale data — and a
+    :class:`~repro.core.verify.DepositTracker` asserts deposit-before-
+    wait ordering as the interpreter traces, raising
+    :class:`~repro.core.verify.SanitizeError` before any device work
+    runs.  Race-free programs stay bit-identical: the canary's original
+    value is saved and non-receiving ranks of the slot's first replace
+    deposit restore it (later deposits see post-deposit contents, so
+    only the first needs the fallback).
     """
     mem = dict(mem)
+    if sanitize:
+        from .verify import DepositTracker, canary_buffers
+        tracker: Optional[DepositTracker] = DepositTracker(prog)
+        canary_saved: Optional[Dict[str, jax.Array]] = {}
+        for cb in canary_buffers(prog):
+            if cb in mem:
+                canary_saved[cb] = mem[cb]
+                mem[cb] = jnp.full_like(mem[cb], jnp.nan)
+    else:
+        tracker = None
+        canary_saved = None
     pid_bufs = prog.buffers_by_pid()
     if tokens is None or comp_tokens is None:
         fresh_trigs, fresh_comps = fresh_token_banks(prog)
@@ -251,6 +283,8 @@ def _interpret_program(
     for d in prog.descriptors:
         pid = d.pid
         if isinstance(d, KernelDesc):
+            if tracker is not None:
+                tracker.kernel(d)
             args = [mem[r] for r in d.reads]
             if mode == "stream":
                 # strict FIFO: kernel ordered after everything before it
@@ -268,11 +302,15 @@ def _interpret_program(
                 spec = prog.buffers[w].pspec
                 axes = tuple(a for a in jax.tree.leaves(list(spec)) if a)
                 mem[w] = _ensure_vma(o.astype(prog.buffers[w].dtype), axes)
+                if canary_saved:
+                    canary_saved.pop(w, None)  # whole-buffer rewrite
             if mode == "stream":
                 tokens[pid] = counters.completion_from(
                     tokens[pid], *[mem[w] for w in d.writes])
 
         elif isinstance(d, StartDesc):
+            if tracker is not None:
+                tracker.start(d)
             batch = batches_by_index[d.batch]
             use_plan = coalesce and batch.plan is not None
             # writeValue: bump after all earlier commands of THIS
@@ -297,7 +335,8 @@ def _interpret_program(
             if use_plan:
                 plan = batch.plan
                 mem, received = _run_coalesced_batch(mem, plan, tokens[pid],
-                                                     mesh_shape)
+                                                     mesh_shape,
+                                                     fallbacks=canary_saved)
                 # a fused transfer feeds the completion counter of every
                 # program it carries a final segment for (the deposited
                 # slabs are slices of the payload, so gating on the
@@ -315,17 +354,22 @@ def _interpret_program(
                                             for ti in sorted(set(tis))]
             else:
                 for ch in batch.channels:
-                    mem, r = _run_channel(mem, ch, tokens[pid], mesh_shape)
+                    mem, r = _run_channel(mem, ch, tokens[pid], mesh_shape,
+                                          fallbacks=canary_saved)
                     dpid = pid if ch.dst_pid is None else ch.dst_pid
                     results_by_pid.setdefault(dpid, []).append(r)
             for coll in batch.colls:
                 mem, r = _run_collective(mem, coll, tokens[pid], prog)
+                if canary_saved:
+                    canary_saved.pop(coll.out, None)  # wholly overwritten
                 results_by_pid.setdefault(pid, []).append(r)
             for dpid, rs in results_by_pid.items():
                 comp_tokens[dpid] = counters.completion_from(
                     comp_tokens[dpid], *rs)
 
         elif isinstance(d, WaitDesc):
+            if tracker is not None:
+                tracker.wait(d)
             # waitValue: gate this program's stream on its completion
             # counter (another program's descriptors flow right past).
             if mode == "stream":
@@ -347,13 +391,20 @@ def _interpret_program(
     return mem, tokens, comp_tokens
 
 
-def _deposit_channel(mem, ch: Channel, received, mesh_shape):
+def _deposit_channel(mem, ch: Channel, received, mesh_shape,
+                     fallbacks: Optional[Dict[str, jax.Array]] = None):
     """Deposit one channel's received slab into its destination buffer.
 
     Shared by the per-channel and coalesced lowerings (same ops, same
     order → bit-identical results).  The receiver mask always derives
     from the channel's *original* peer permutation, independent of how
     the payload travelled.
+
+    ``fallbacks`` is the sanitizer's saved-original map: when the
+    destination buffer was NaN-poisoned at pass start, the first
+    replace deposit takes its non-receiver lanes from the saved
+    original instead of the poisoned current value (consumed on use, so
+    later deposits see real post-deposit contents).
     """
     axes = _axes_tuple(ch.axis)
     perm = ch.perm(mesh_shape)
@@ -369,7 +420,8 @@ def _deposit_channel(mem, ch: Channel, received, mesh_shape):
         dsts = np.array(sorted({d for _, d in perm}), dtype=np.int32)
         me = _linear_rank(axes, mesh_shape)
         is_receiver = jnp.isin(me, jnp.asarray(dsts))
-        cur = dst[region]
+        orig = fallbacks.pop(ch.dst_buf, None) if fallbacks else None
+        cur = dst[region] if orig is None else orig[region]
         dst = dst.at[region].set(
             jnp.where(is_receiver, received.astype(dst.dtype), cur)
         )
@@ -377,7 +429,7 @@ def _deposit_channel(mem, ch: Channel, received, mesh_shape):
     return mem
 
 
-def _run_channel(mem, ch: Channel, token, mesh_shape):
+def _run_channel(mem, ch: Channel, token, mesh_shape, fallbacks=None):
     """One matched (send, recv) pair → one ppermute, tied to the trigger."""
     axes = _axes_tuple(ch.axis)
     src = mem[ch.src_buf]
@@ -387,11 +439,11 @@ def _run_channel(mem, ch: Channel, token, mesh_shape):
     _, (src,) = counters.tie(token, src)
     perm = ch.perm(mesh_shape)
     received = jax.lax.ppermute(src, axes if len(axes) > 1 else axes[0], perm)
-    mem = _deposit_channel(mem, ch, received, mesh_shape)
+    mem = _deposit_channel(mem, ch, received, mesh_shape, fallbacks=fallbacks)
     return mem, received
 
 
-def _run_coalesced_batch(mem, plan, token, mesh_shape):
+def _run_coalesced_batch(mem, plan, token, mesh_shape, fallbacks=None):
     """Fire one batch's coalescing plan: fused by-axis transfers.
 
     Stage by stage, each :class:`~repro.core.matching.CoalescedChannel`
@@ -434,13 +486,14 @@ def _run_coalesced_batch(mem, plan, token, mesh_shape):
             # statically dead channel: its ppermute would deliver zeros
             # on every rank — deposit them without packing or moving
             seg = jnp.zeros(plan.shapes[ci], mem[ch.src_buf].dtype)
-            mem = _deposit_channel(mem, ch, seg, mesh_shape)
+            mem = _deposit_channel(mem, ch, seg, mesh_shape,
+                                   fallbacks=fallbacks)
             continue
         ti, off = route[-1]
         size = int(np.prod(plan.shapes[ci], dtype=np.int64))
         seg = jax.lax.slice_in_dim(received[ti], off, off + size)
         mem = _deposit_channel(mem, ch, seg.reshape(plan.shapes[ci]),
-                               mesh_shape)
+                               mesh_shape, fallbacks=fallbacks)
     return mem, received
 
 

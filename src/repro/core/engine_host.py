@@ -56,10 +56,17 @@ class HostStats:
 class HostEngine:
     """Per-descriptor, host-driven execution of an STProgram."""
 
-    def __init__(self, program: STProgram, sync: str = "every_op"):
+    def __init__(self, program: STProgram, sync: str = "every_op",
+                 sanitize: bool = False):
         if sync not in ("every_op", "batch"):
             raise ValueError("sync must be 'every_op' or 'batch'")
         program.require_closed()
+        if sanitize:
+            # the host engine syncs at descriptor boundaries, so there is
+            # no canary to plant — the sanitizer reduces to the static
+            # deposit-before-wait assertion over the descriptor stream
+            from .verify import check_deposit_order
+            check_deposit_order(program)
         self.program = program
         self.sync = sync
         self.mesh = program.mesh

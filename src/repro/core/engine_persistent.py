@@ -244,8 +244,10 @@ class PersistentEngine(FusedEngine):
         reduce_fns: Optional[Dict[str, Callable]] = None,
         donate: bool = False,
         coalesce: bool = True,
+        sanitize: bool = False,
     ):
-        super().__init__(program, mode=mode, donate=donate, coalesce=coalesce)
+        super().__init__(program, mode=mode, donate=donate, coalesce=coalesce,
+                         sanitize=sanitize)
         self.reduce_fns: Dict[str, Callable] = dict(reduce_fns or {})
 
         if isinstance(program, STSchedule):
@@ -334,6 +336,7 @@ class PersistentEngine(FusedEngine):
                 slots=self._slots,
                 reduce_fns=self.reduce_fns,
                 coalesce=self.coalesce,
+                sanitize=self.sanitize,
             )
         elif self.cond_fn is not None:
             out_specs = (specs, P(), P())
@@ -347,6 +350,7 @@ class PersistentEngine(FusedEngine):
                 reduce_fn=self.reduce_fn,
                 cond_fn=self.cond_fn,
                 coalesce=self.coalesce,
+                sanitize=self.sanitize,
             )
         else:
             out_specs = (specs, P()) if self.reduce_fn is not None else specs
@@ -360,6 +364,7 @@ class PersistentEngine(FusedEngine):
                 reduce_fn=self.reduce_fn,
                 unroll=2 if (self.double_buffer and self.n_iters > 1) else 1,
                 coalesce=self.coalesce,
+                sanitize=self.sanitize,
             )
         sharded = shard_map(
             body, mesh=self.mesh, in_specs=(specs,), out_specs=out_specs,
@@ -383,6 +388,7 @@ def _run_persistent(
     reduce_fn,
     unroll: int,
     coalesce: bool = True,
+    sanitize: bool = False,
 ):
     mem = dict(mem)
     # two copies of each message slot, rotated zero-copy through the
@@ -402,7 +408,8 @@ def _run_persistent(
         cur.update(cur_slots)
         cur, tokens, comps = _interpret_program(
             cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
-            tokens=tokens, comp_tokens=comps, coalesce=coalesce)
+            tokens=tokens, comp_tokens=comps, coalesce=coalesce,
+            sanitize=sanitize)
         if reduce_fn is not None:  # sees every buffer, slots included
             val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
             red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
@@ -432,6 +439,7 @@ def _run_persistent_while(
     reduce_fn,
     cond_fn,
     coalesce: bool = True,
+    sanitize: bool = False,
 ):
     """Predicate-terminated variant: ``lax.while_loop`` until
     ``cond_fn(reduction)`` goes False (or ``max_iters`` is hit).
@@ -458,7 +466,8 @@ def _run_persistent_while(
         cur.update(cur_slots)
         cur, tokens, comps = _interpret_program(
             cur, prog=prog, mode=mode, mesh_shape=mesh_shape,
-            tokens=tokens, comp_tokens=comps, coalesce=coalesce)
+            tokens=tokens, comp_tokens=comps, coalesce=coalesce,
+            sanitize=sanitize)
         val = jnp.asarray(reduce_fn(cur), jnp.float32).reshape(())
         red = jax.lax.dynamic_update_index_in_dim(red, val, i, axis=0)
         written = {n: cur.pop(n) for n in slots}
@@ -486,6 +495,7 @@ def _run_schedule_while(
     slots: Tuple[str, ...],
     reduce_fns: Dict[str, Callable],
     coalesce: bool = True,
+    sanitize: bool = False,
 ):
     """Multi-queue variant: every sub-program runs to its OWN iteration
     count / predicate inside one ``while_loop``.
@@ -528,7 +538,8 @@ def _run_schedule_while(
         cur.update(cur_slots)
         new, tokens, comps = _interpret_program(
             cur, prog=sched, mode=mode, mesh_shape=mesh_shape,
-            tokens=tokens, comp_tokens=comps, coalesce=coalesce)
+            tokens=tokens, comp_tokens=comps, coalesce=coalesce,
+            sanitize=sanitize)
 
         # per-program reductions, realized counts and continue flags
         ndone = dict(ndone)

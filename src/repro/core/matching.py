@@ -88,6 +88,10 @@ class Channel:
     # whose buffer the deposit lands in — and whose completion counter
     # the transfer bumps.  None = the owning batch's own program.
     dst_pid: Optional[int] = None
+    # Enqueue-site provenance of the matched send/recv descriptors
+    # ("file:line"; threaded into verify.py diagnostics).
+    send_site: Optional[str] = None
+    recv_site: Optional[str] = None
 
     def perm(self, mesh_shape: dict) -> Sequence[Tuple[int, int]]:
         return perm_for(self.peer, mesh_shape)[1]
@@ -95,6 +99,12 @@ class Channel:
 
 class MatchError(RuntimeError):
     pass
+
+
+def _site_of(d) -> str:
+    """Enqueue-site suffix for error messages ('' when not captured)."""
+    site = getattr(d, "site", None)
+    return f" [enqueued at {site}]" if site else ""
 
 
 def _peer_key(peer) -> Tuple:
@@ -140,6 +150,7 @@ def _match_fifo(sends, recvs, make_channel, kind: str) -> List:
                 + (f" remote={d.remote!r}" if d.remote else "")
                 + " (no matching posted receive; ST forbids wildcards so "
                   "this would hang at runtime)"
+                + _site_of(d)
             )
         out.append(make_channel(s, q.pop(0)))
 
@@ -150,6 +161,7 @@ def _match_fifo(sends, recvs, make_channel, kind: str) -> List:
             f"unmatched {kind} recv: buf={r.buf!r} tag={r.tag} peer={r.peer}"
             + (f" remote={r.remote!r}" if r.remote else "")
             + f" ({len(leftovers)} receive(s) never matched by a send)"
+            + _site_of(r)
         )
     return out
 
@@ -172,6 +184,8 @@ def _channel_for(s: SendDesc, r: RecvDesc,
         recv_region=r.region,
         mode=r.mode,
         dst_pid=dst_pid,
+        send_site=s.site,
+        recv_site=r.site,
     )
 
 
@@ -456,30 +470,42 @@ def validate_program_order(descs: Sequence[Any]) -> None:
     * every send/recv/coll must be covered by a later `start`;
     * `wait` must reference a batch that has a `start`;
     * thresholds must be monotonically non-decreasing (DWQ contract).
+
+    The same invariants are re-checked on *built* programs as the
+    ``ST002``/``ST003``/``ST004`` rules of :mod:`repro.core.verify`
+    (with full diagnostics); this pre-build pass exists to fail fast
+    with a hard :class:`MatchError` before matching even starts.
     """
     from .descriptors import StartDesc, WaitDesc  # local to avoid cycle
 
     open_comm = 0
+    open_site = None
     started = 0
     waits_seen = 0
     last_threshold = 0
     for d in descs:
         if isinstance(d, (SendDesc, RecvDesc, CollDesc)):
             open_comm += 1
+            open_site = getattr(d, "site", None) or open_site
             if d.threshold >= 0 and d.threshold < last_threshold:
-                raise MatchError("descriptor thresholds must be monotone")
+                raise MatchError(
+                    "[ST003] descriptor thresholds must be monotone"
+                    + _site_of(d))
             last_threshold = max(last_threshold, d.threshold)
         elif isinstance(d, StartDesc):
             started += 1
             open_comm = 0
+            open_site = None
         elif isinstance(d, WaitDesc):
             waits_seen += 1
             if waits_seen > started:
                 raise MatchError(
-                    "MPIX_Enqueue_wait before any matching MPIX_Enqueue_start"
+                    "[ST002] MPIX_Enqueue_wait before any matching "
+                    "MPIX_Enqueue_start" + _site_of(d)
                 )
     if open_comm:
         raise MatchError(
-            f"{open_comm} enqueued communication op(s) not covered by an "
-            f"MPIX_Enqueue_start — they would never trigger"
+            f"[ST004] {open_comm} enqueued communication op(s) not covered "
+            f"by an MPIX_Enqueue_start — they would never trigger"
+            + (f" [last enqueued at {open_site}]" if open_site else "")
         )

@@ -28,6 +28,17 @@ MPIX_Enqueue_wait       ``queue.enqueue_wait()``
                         ``(axis, permutation)`` and lowered to ONE fused
                         by-axis transfer each (26 → ≤6 collectives per
                         start gate for direct26), bit-identical deposits
+(DWQ validation        ``build(verify="warn"|"error"|"off")`` /
+ face)                  ``compose(..., verify=)`` → :mod:`repro.core.verify`:
+                        a static pass symbolically executes the program's
+                        trigger/completion counter banks in stream order
+                        and emits ``ST0xx`` :class:`~repro.core.verify.
+                        Diagnostic` records (deadlocked waits, slot races,
+                        counter drift, structural lint) with enqueue-site
+                        provenance — the build-time stand-in for the
+                        debugger the NIC's offloaded DWQ does not have;
+                        ``engine(..., sanitize=True)`` adds the runtime
+                        NaN-canary sanitizer
 (ML serving face)       ``repro.launch.serve.ServeEngine``: greedy decode
                         as a device-resident masked while_loop (ONE host
                         dispatch per chunk, per-sequence EOS/max-len
@@ -75,6 +86,7 @@ Semantics preserved from the paper:
 from __future__ import annotations
 
 import dataclasses
+import traceback
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -97,6 +109,23 @@ from .matching import (
     match_batch,
     validate_program_order,
 )
+
+
+def _call_site() -> Optional[str]:
+    """``file:line`` of the enqueue call that created a descriptor.
+
+    Walks the extracted stack outward past this module's own frames so
+    builder helpers (``halo.py``, user code, tests) are named rather
+    than ``queue.py`` itself.  Paths are shortened to their last two
+    components — enough to be clickable, short enough for a table.
+    """
+    for frame in reversed(traceback.extract_stack(limit=8)):
+        if frame.filename == __file__:
+            continue
+        parts = frame.filename.replace("\\", "/").rsplit("/", 2)
+        short = "/".join(parts[-2:]) if len(parts) > 1 else parts[-1]
+        return f"{short}:{frame.lineno}"
+    return None
 
 
 @dataclasses.dataclass
@@ -180,7 +209,7 @@ class STProgram:
         would hang)."""
         if self.open_links:
             raise ValueError(
-                f"program {self.name!r} has {self.open_links} unresolved "
+                f"[ST012] program {self.name!r} has {self.open_links} unresolved "
                 f"cross-program (remote=) descriptor(s): compose() it with "
                 f"its peer program(s) before running — an open channel has "
                 f"no matching side and would hang")
@@ -318,7 +347,9 @@ class STQueue:
         for b in tuple(reads) + tuple(writes):
             if b not in self._buffers:
                 raise QueueError(f"kernel touches undeclared buffer {b!r}")
-        self._descs.append(KernelDesc(fn, tuple(reads), tuple(writes), name))
+        self._descs.append(
+            KernelDesc(fn, tuple(reads), tuple(writes), name,
+                       site=_call_site()))
         self._built = None
 
     def enqueue_send(self, buf: str, peer, tag: int, region=None,
@@ -335,7 +366,7 @@ class STQueue:
         self._check_buf(buf)
         self._descs.append(
             SendDesc(buf, peer, tag, threshold=self._trigger.next_threshold(),
-                     region=region, remote=remote)
+                     region=region, remote=remote, site=_call_site())
         )
         self._built = None
 
@@ -354,7 +385,8 @@ class STQueue:
             raise QueueError("recv mode must be 'replace' or 'add'")
         self._descs.append(
             RecvDesc(buf, peer, tag, threshold=self._trigger.next_threshold(),
-                     region=region, mode=mode, remote=remote)
+                     region=region, mode=mode, remote=remote,
+                     site=_call_site())
         )
         self._built = None
 
@@ -367,7 +399,9 @@ class STQueue:
         if op not in ("all_gather", "reduce_scatter", "all_reduce", "all_to_all", "ppermute"):
             raise QueueError(f"unknown collective {op!r}")
         self._descs.append(
-            CollDesc(op, buf, out, axis, kwargs, threshold=self._trigger.next_threshold())
+            CollDesc(op, buf, out, axis, kwargs,
+                     threshold=self._trigger.next_threshold(),
+                     site=_call_site())
         )
         self._built = None
 
@@ -376,7 +410,8 @@ class STQueue:
         every comm op enqueued since the previous start."""
         self._check_live()
         batch = self._trigger.record_start()
-        self._descs.append(StartDesc(batch=batch - 1, threshold=batch))
+        self._descs.append(
+            StartDesc(batch=batch - 1, threshold=batch, site=_call_site()))
         self._built = None
 
     def enqueue_wait(self) -> None:
@@ -386,7 +421,10 @@ class STQueue:
         n_started = self._trigger.scheduled
         if n_started == 0:
             raise QueueError("enqueue_wait before any enqueue_start")
-        self._descs.append(WaitDesc(batch=n_started - 1, expected=self._completion.record_op()))
+        self._descs.append(
+            WaitDesc(batch=n_started - 1,
+                     expected=self._completion.record_op(),
+                     site=_call_site()))
         self._built = None
 
     def free(self) -> None:
@@ -404,7 +442,7 @@ class STQueue:
     # -- build ---------------------------------------------------------------
 
     def build(self, name: Optional[str] = None,
-              coalesce: bool = True) -> STProgram:
+              coalesce: bool = True, verify: str = "warn") -> STProgram:
         """Trace-time matching + validation → immutable STProgram.
 
         With ``coalesce=True`` (default) every batch's matched channels
@@ -413,13 +451,27 @@ class STQueue:
         contiguous-buffer step) and the plan is recorded on the batch;
         engines execute the plan when present and results stay
         bit-identical to the uncoalesced lowering.
+
+        ``verify`` runs the :mod:`repro.core.verify` static pass on the
+        built program: ``"warn"`` (default) reports every diagnostic as
+        an :class:`~repro.core.verify.STLintWarning`, ``"error"`` raises
+        :class:`~repro.core.verify.VerifyError` on error-severity
+        diagnostics (warnings still warn), ``"off"`` skips the pass.
+        A program with open ``remote=`` descriptors is only checked for
+        single-queue rules here; :func:`repro.core.schedule.compose`
+        re-verifies the whole schedule (default ``"error"``) once the
+        cross-program links are resolved.
         """
         self._check_live()
         resolved = name or self.name
         # the cache is keyed on the resolved program name AND the
         # coalesce flag: a second build("other") — or a rebuild with
-        # coalescing toggled — must not hand back the cached program
+        # coalescing toggled — must not hand back the cached program.
+        # (verify is not part of the key: it never changes the program,
+        # so the pass simply re-runs on the cached result.)
         if self._built is not None and self._built_key == (resolved, coalesce):
+            from .verify import run_verify  # local: verify imports queue
+            run_verify(self._built, verify)
             return self._built
         validate_program_order(self._descs)
         mesh_shape = dict(self.mesh.shape)
@@ -484,6 +536,8 @@ class STQueue:
             name=resolved,
         )
         self._built_key = (resolved, coalesce)
+        from .verify import run_verify  # local import: verify imports queue
+        run_verify(self._built, verify)
         return self._built
 
     # -- helpers ---------------------------------------------------------------

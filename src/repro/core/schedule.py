@@ -223,7 +223,8 @@ def _interleave(
 
 
 def compose(*programs: STProgram, name: Optional[str] = None,
-            links: Optional[Sequence[Tuple[str, str]]] = None) -> STSchedule:
+            links: Optional[Sequence[Tuple[str, str]]] = None,
+            verify: str = "error") -> STSchedule:
     """Fuse N matched STPrograms into one :class:`STSchedule`.
 
     Buffers are namespaced ``"{program.name}/{buffer}"``; descriptors and
@@ -253,6 +254,13 @@ def compose(*programs: STProgram, name: Optional[str] = None,
     (compose all leaves in one call instead), unmatched or undeclared
     cross-program descriptors, and link cycles the interleaver cannot
     order.
+
+    ``verify`` runs the :mod:`repro.core.verify` static pass on the
+    finished schedule — default ``"error"`` (a composed schedule is
+    engine-ready, so error-severity diagnostics raise
+    :class:`~repro.core.verify.VerifyError` here rather than hang
+    later); ``"warn"`` downgrades to :class:`~repro.core.verify
+    .STLintWarning`, ``"off"`` skips the pass.
     """
     if not programs:
         raise ScheduleError("compose() needs at least one program")
@@ -367,6 +375,7 @@ def compose(*programs: STProgram, name: Optional[str] = None,
     pid_of_name = {s.name: s.pid for s in subs}
     batch_by_index = {b.index: b for b in batches}
     links_meta: List[Link] = []
+    link_sites: List[Optional[str]] = []  # recv-side provenance per link
     for pair in sorted(set(open_send_pool) | set(open_recv_pool)):
         src_name, dst_name = pair
         try:
@@ -389,6 +398,7 @@ def compose(*programs: STProgram, name: Optional[str] = None,
                 src=src_name, dst=dst_name, tag=ch.tag,
                 src_batch=src_batch, dst_batch=dst_batch,
                 dst_buf=ch.dst_buf))
+            link_sites.append(ch.recv_site)
 
     if links is not None:
         declared = {tuple(p) for p in links}
@@ -418,7 +428,7 @@ def compose(*programs: STProgram, name: Optional[str] = None,
                 elif isinstance(d, WaitDesc):
                     waits_of[p].append((d.batch, si))
     constraints: Dict[Tuple[int, int], set] = defaultdict(set)
-    for l in links_meta:
+    for l, l_site in zip(links_meta, link_sites):
         src_pid, dst_pid = pid_of_name[l.src], pid_of_name[l.dst]
         gate_si = next((si for wb, si in waits_of[dst_pid]
                         if wb >= l.dst_batch), None)
@@ -430,11 +440,12 @@ def compose(*programs: STProgram, name: Optional[str] = None,
                 f"program {l.dst!r} posts a remote receive (tag {l.tag}, "
                 f"from {l.src!r}) in a batch with no following "
                 f"enqueue_wait: the cross-program deposit could never be "
-                f"observed deterministically")
+                f"observed deterministically"
+                + (f" [receive enqueued at {l_site}]" if l_site else ""))
         constraints[(dst_pid, gate_si)].add(
             (src_pid, start_seg[(src_pid, l.src_batch)]))
 
-    return STSchedule(
+    sched = STSchedule(
         buffers=buffers,
         descriptors=_interleave(per_prog_segments, constraints),
         batches=tuple(batches),
@@ -445,3 +456,6 @@ def compose(*programs: STProgram, name: Optional[str] = None,
         subs=tuple(subs),
         links=tuple(links_meta),
     )
+    from .verify import run_verify  # local import: verify imports queue
+    run_verify(sched, verify)
+    return sched

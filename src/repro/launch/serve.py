@@ -83,6 +83,54 @@ def _argmax_tok(logits):
     return jnp.argmax(logits, -1).astype(jnp.int32)
 
 
+def build_admission_schedule(mesh=None, *, slots: int = 4, width: int = 8,
+                             verify: str = "error"):
+    """The admission composition as an explicit ST schedule.
+
+    :meth:`ServeEngine._admit_decode_inner` fuses "prefill the admitted
+    slots, then resume in-flight decode" into one dispatch, but it does
+    so as a plain jitted function — opaque to STLint.  This builder
+    expresses the same handoff as two :class:`~repro.core.STQueue`
+    programs joined by a cross-program link, so the admission path has a
+    lintable model: ``prefill`` computes the KV for the admitted slots
+    and *sends* it; ``decode`` *receives* it into its cache slot, waits
+    on the deposit (triggered-op semantics: the decode step must not
+    read the slot before the prefill deposit lands), then steps.  The
+    ``python -m repro.analysis`` CLI and the verifier test sweep lint
+    this schedule alongside the faces programs.
+    """
+    from repro.core import OffsetPeer, STQueue, compose
+
+    if mesh is None:
+        from repro.parallel import make_mesh
+        mesh = make_mesh((jax.device_count(),), ("x",))
+    ax = mesh.axis_names[0]
+    n = int(mesh.shape[ax]) * slots
+
+    qp = STQueue(mesh, name="prefill")
+    qp.buffer("prompt", (n, width), np.float32, pspec=(ax, None))
+    qp.buffer("kv", (n, width), np.float32, pspec=(ax, None))
+    qp.enqueue_kernel(jnp.tanh, ["prompt"], ["kv"], name="prefill")
+    qp.enqueue_send("kv", OffsetPeer(ax, 0, periodic=True), tag=31,
+                    remote="decode")
+    qp.enqueue_start()
+    qp.enqueue_wait()
+    prefill = qp.build()
+
+    qd = STQueue(mesh, name="decode")
+    qd.buffer("cache", (n, width), np.float32, pspec=(ax, None))
+    qd.buffer("tok", (n, width), np.float32, pspec=(ax, None))
+    qd.enqueue_recv("cache", OffsetPeer(ax, 0, periodic=True), tag=31,
+                    remote="prefill")
+    qd.enqueue_start()
+    qd.enqueue_wait()
+    qd.enqueue_kernel(lambda c: jnp.cumsum(c, axis=-1), ["cache"], ["tok"],
+                      name="decode")
+    decode = qd.build()
+
+    return compose(prefill, decode, name="serve_admission", verify=verify)
+
+
 class ServeEngine:
     """Jit-compiled serve programs over one slot-set of KV caches.
 

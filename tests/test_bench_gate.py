@@ -55,7 +55,11 @@ def test_matching_meta_compares_medians(tmp_path, check_against, capsys):
     path = _write(tmp_path, _faces(100.0))
     # >20% regression at MATCHING settings must fail the gate
     assert check_against(_faces(200.0), path) == 1
-    assert "PERF GATE FAILED" in capsys.readouterr().out
+    err = capsys.readouterr().err
+    # the non-zero exit must NAME the failing row (stderr, so it is
+    # visible in CI logs even when stdout is buffered away)
+    assert "PERF GATE FAILED" in err
+    assert "faces_fig8/baseline" in err and "> bound" in err
     # and an unchanged run passes with the medians actually checked
     assert check_against(_faces(100.0), path) == 0
     assert f"{len(VARIANTS)} tracked medians" in capsys.readouterr().out
@@ -86,4 +90,4 @@ def test_absent_stored_meta_skips_medians(tmp_path, check_against, capsys):
     fresh["faces_figP/persistent"] = {"median_ms": 9.0, "dispatches": 1}
     fresh["faces_figP/fused_per_iter"] = {"median_ms": 3.0, "dispatches": 10}
     assert check_against(fresh, path) == 1
-    assert "1-dispatch path" in capsys.readouterr().out
+    assert "1-dispatch path" in capsys.readouterr().err

@@ -1,0 +1,505 @@
+"""STLint (repro.core.verify) — mutation suite + runtime sanitizer.
+
+One failing test per ``ST0xx`` rule: a seeded broken program built by
+mutating a clean one with ``dataclasses.replace`` (the queue API refuses
+to *enqueue* most of these mistakes — which is exactly why the verifier
+must catch programs no queue built, e.g. the ROADMAP's future
+auto-decomposition output), plus passing coverage: the clean source
+program of every mutation lints clean, and an all-green sweep asserts
+every program the benchmarks build (the ``repro.analysis`` registry,
+faces figs + linked N-part + serve admission) produces zero diagnostics.
+
+The sanitizer half: ``engine(..., sanitize=True)`` must (a) be
+bit-identical to the unsanitized engine on clean programs despite the
+NaN-canary poisoning, and (b) catch a seeded deposit-before-wait race
+that the unsanitized engine silently accepts.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacesConfig,
+    FusedEngine,
+    HostEngine,
+    OffsetPeer,
+    PersistentEngine,
+    STLintWarning,
+    STQueue,
+    SanitizeError,
+    VerifyError,
+    build_faces_program,
+    compose,
+    run_verify,
+    verify_program,
+)
+from repro.core.descriptors import (
+    KernelDesc,
+    RecvDesc,
+    SendDesc,
+    StartDesc,
+    WaitDesc,
+)
+from repro.core.halo import AXES3
+from repro.core.verify import (
+    RULES,
+    Diagnostic,
+    canary_buffers,
+    check_deposit_order,
+    format_diagnostics,
+)
+
+
+def _meshx():
+    from repro.parallel import make_mesh
+    return make_mesh((1,), ("x",))
+
+
+def _mesh111():
+    from repro.parallel import make_mesh
+    return make_mesh((1, 1, 1), AXES3)
+
+
+def _exchange(mesh, n_batches=1, wait=True, kernel=True, verify="off",
+              name="p"):
+    """A clean n-batch self-exchange (+ unpack kernel) to mutate."""
+    q = STQueue(mesh, name=name)
+    q.buffer("u", (4,), np.float32, pspec=("x",))
+    q.buffer("out", (4,), np.float32, pspec=("x",))
+    for b in range(n_batches):
+        q.buffer(f"halo{b}", (4,), np.float32, pspec=("x",))
+    for b in range(n_batches):
+        q.enqueue_send("u", OffsetPeer("x", 0, periodic=True), tag=b)
+        q.enqueue_recv(f"halo{b}", OffsetPeer("x", 0, periodic=True), tag=b)
+        q.enqueue_start()
+    if wait:
+        q.enqueue_wait()
+    if kernel:
+        q.enqueue_kernel(lambda h: h + 1.0, ["halo0"], ["out"],
+                         name="unpack")
+    return q.build(verify=verify)
+
+
+def _codes(prog):
+    return {d.rule for d in verify_program(prog)}
+
+
+def _idx(prog, kind, pid=None, last=False):
+    hits = [i for i, d in enumerate(prog.descriptors)
+            if isinstance(d, kind) and (pid is None or d.pid == pid)]
+    return hits[-1] if last else hits[0]
+
+
+def _with_descs(prog, descs):
+    return dataclasses.replace(prog, descriptors=tuple(descs))
+
+
+def _linked_pair(mesh):
+    qa = STQueue(mesh, name="A")
+    qa.buffer("a", (4,), np.float32, pspec=("x",))
+    qa.enqueue_send("a", OffsetPeer("x", 0, periodic=True), tag=7,
+                    remote="B")
+    qa.enqueue_start()
+    qa.enqueue_wait()
+    qb = STQueue(mesh, name="B")
+    qb.buffer("slot", (4,), np.float32, pspec=("x",))
+    qb.buffer("out", (4,), np.float32, pspec=("x",))
+    qb.enqueue_recv("slot", OffsetPeer("x", 0, periodic=True), tag=7,
+                    remote="A")
+    qb.enqueue_start()
+    qb.enqueue_wait()
+    qb.enqueue_kernel(lambda s: s * 2.0, ["slot"], ["out"], name="double")
+    return qa.build(), qb.build()
+
+
+# -- per-rule mutation suite --------------------------------------------------
+
+
+class TestRules:
+    def test_clean_programs_lint_clean(self):
+        mesh = _meshx()
+        assert verify_program(_exchange(mesh)) == []
+        assert verify_program(_exchange(mesh, n_batches=2)) == []
+        sched = compose(*_linked_pair(mesh))
+        assert verify_program(sched) == []
+
+    def test_st001_deadlocked_wait_own_program(self):
+        prog = _exchange(_meshx(), n_batches=2)
+        descs = list(prog.descriptors)
+        # move the wait ahead of batch 1's start: it now gates a
+        # completion whose trigger is not yet emitted in stream order
+        wi = _idx(prog, WaitDesc)
+        w = descs.pop(wi)
+        descs.insert(_idx(prog, StartDesc, last=True), w)
+        bad = _with_descs(prog, descs)
+        assert "ST001" in _codes(bad)
+        assert "ST001" not in _codes(prog)
+
+    def test_st001_deadlocked_wait_cross_program(self):
+        sched = compose(*_linked_pair(_meshx()))
+        # drop the SENDER's start (and its wait, to keep its own stream
+        # balanced): the receiver's wait now gates a cross-program
+        # deposit whose trigger never fires — the interleaver's local
+        # cycle test cannot see this, the whole-schedule walk must
+        descs = [d for d in sched.descriptors
+                 if not (isinstance(d, (StartDesc, WaitDesc)) and d.pid == 0)]
+        bad = _with_descs(sched, descs)
+        diags = verify_program(bad)
+        assert any(d.rule == "ST001" and "cross-program" in d.message
+                   for d in diags)
+
+    def test_st002_wait_before_start(self):
+        prog = _exchange(_meshx())
+        descs = list(prog.descriptors)
+        wi, si = _idx(prog, WaitDesc), _idx(prog, StartDesc)
+        descs[wi], descs[si] = descs[si], descs[wi]
+        assert "ST002" in _codes(_with_descs(prog, descs))
+
+    def test_st003_non_monotone_thresholds(self):
+        prog = _exchange(_meshx(), n_batches=2)
+        descs = list(prog.descriptors)
+        si = _idx(prog, SendDesc)
+        descs[si] = dataclasses.replace(descs[si], threshold=99)
+        bad = _with_descs(prog, descs)
+        diags = [d for d in verify_program(bad) if d.rule == "ST003"]
+        assert diags and diags[0].severity == "error"
+
+    def test_st004_comm_after_last_start(self):
+        prog = _exchange(_meshx(), kernel=False)
+        descs = [d for d in prog.descriptors
+                 if not isinstance(d, (StartDesc, WaitDesc))]
+        diags = verify_program(_with_descs(prog, descs))
+        # both the send and the recv are uncovered
+        assert [d.rule for d in diags].count("ST004") == 2
+
+    def test_st005_unwaited_completions_warning(self):
+        prog = _exchange(_meshx(), wait=False, kernel=False)
+        diags = verify_program(prog)
+        assert {d.rule for d in diags} == {"ST005"}
+        assert diags[0].severity == "warning"
+
+    def test_st005_escalates_to_error_when_persistent(self):
+        prog = _exchange(_meshx(), kernel=False).persistent(3)
+        descs = [d for d in prog.descriptors if not isinstance(d, WaitDesc)]
+        diags = [d for d in verify_program(_with_descs(prog, descs))
+                 if d.rule == "ST005"]
+        assert diags and diags[0].severity == "error"
+        assert "persistent" in diags[0].message
+
+    def test_st006_pending_deposit_overwritten(self):
+        mesh = _meshx()
+        q = STQueue(mesh, name="clobber")
+        q.buffer("u", (4,), np.float32, pspec=("x",))
+        q.buffer("halo", (4,), np.float32, pspec=("x",))
+        for tag in (0, 1):  # two deposits into one slot, no wait between
+            q.enqueue_send("u", OffsetPeer("x", 0, periodic=True), tag=tag)
+            q.enqueue_recv("halo", OffsetPeer("x", 0, periodic=True),
+                           tag=tag)
+            q.enqueue_start()
+        q.enqueue_wait()
+        diags = [d for d in verify_program(q.build(verify="off"))
+                 if d.rule == "ST006"]
+        assert diags and diags[0].severity == "warning"
+
+    def test_st007_read_before_wait(self):
+        prog = _exchange(_meshx())
+        descs = list(prog.descriptors)
+        ki = _idx(prog, KernelDesc)
+        k = descs.pop(ki)
+        descs.insert(_idx(prog, WaitDesc), k)
+        diags = [d for d in verify_program(_with_descs(prog, descs))
+                 if d.rule == "ST007"]
+        assert diags and diags[0].severity == "error"
+        assert "unpack" in diags[0].message
+
+    def test_st008_corrupted_plan(self):
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        prog = build_faces_program(cfg, _mesh111())
+        bi, b = next((i, b) for i, b in enumerate(prog.batches)
+                     if b.plan is not None)
+        t0 = b.plan.transfers[0]
+        seg = t0.segments[-1]
+        segs = t0.segments[:-1] + (
+            dataclasses.replace(seg, offset=seg.offset + 1),)
+        plan = dataclasses.replace(
+            b.plan,
+            transfers=(dataclasses.replace(t0, segments=segs),)
+            + b.plan.transfers[1:])
+        batches = list(prog.batches)
+        batches[bi] = dataclasses.replace(b, plan=plan)
+        bad = dataclasses.replace(prog, batches=tuple(batches))
+        assert "ST008" in _codes(bad)
+        assert "ST008" not in _codes(prog)
+
+    def test_st008_route_segment_mismatch(self):
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        prog = build_faces_program(cfg, _mesh111())
+        bi, b = next((i, b) for i, b in enumerate(prog.batches)
+                     if b.plan is not None)
+        ci, route = next((ci, r) for ci, r in enumerate(b.plan.routes) if r)
+        ti, off = route[0]
+        routes = list(b.plan.routes)
+        routes[ci] = ((ti, off + 1),) + route[1:]
+        plan = dataclasses.replace(b.plan, routes=tuple(routes))
+        batches = list(prog.batches)
+        batches[bi] = dataclasses.replace(b, plan=plan)
+        bad = dataclasses.replace(prog, batches=tuple(batches))
+        assert any(d.rule == "ST008" and "alias" in d.message
+                   for d in verify_program(bad))
+
+    def test_st009_foreign_buffer_access(self):
+        sched = compose(*_linked_pair(_meshx()))
+        descs = list(sched.descriptors)
+        ki = next(i for i, d in enumerate(descs)
+                  if isinstance(d, KernelDesc) and d.name == "double")
+        descs[ki] = dataclasses.replace(descs[ki], reads=("A/a",))
+        diags = [d for d in verify_program(_with_descs(sched, descs))
+                 if d.rule == "ST009"]
+        assert diags and diags[0].severity == "error"
+
+    def test_st010_persistent_accumulator_drift(self):
+        prog = _exchange(_meshx()).persistent(2)
+        bi, b = next((i, b) for i, b in enumerate(prog.batches)
+                     if b.channels)
+        chans = [dataclasses.replace(b.channels[0], mode="add")] \
+            + list(b.channels[1:])
+        batches = list(prog.batches)
+        batches[bi] = dataclasses.replace(b, channels=chans)
+        bad = dataclasses.replace(prog, batches=tuple(batches))
+        diags = [d for d in verify_program(bad) if d.rule == "ST010"]
+        assert diags and diags[0].severity == "warning"
+        # one-shot programs are exempt: drift needs the loop
+        oneshot = dataclasses.replace(bad, n_iters=1)
+        assert "ST010" not in _codes(oneshot)
+
+    def test_st011_dead_channels_unpruned(self):
+        # non-periodic faces on a collapsed grid: every channel's perm is
+        # empty; force the "coalescing requested but declined" state
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=False)
+        prog = build_faces_program(cfg, _mesh111())
+        batches = tuple(
+            dataclasses.replace(b, plan=None, coalesce=True)
+            for b in prog.batches)
+        bad = dataclasses.replace(prog, batches=batches)
+        diags = [d for d in verify_program(bad) if d.rule == "ST011"]
+        assert diags and diags[0].severity == "warning"
+        # with the plan present the dead channels are pruned: clean
+        assert "ST011" not in _codes(prog)
+
+    def test_st012_open_links_at_engine_time(self):
+        pa, _ = _linked_pair(_meshx())
+        with pytest.raises(ValueError, match=r"\[ST012\]"):
+            HostEngine(pa)
+
+
+# -- policy wiring ------------------------------------------------------------
+
+
+class TestPolicy:
+    def _bad(self):
+        prog = _exchange(_meshx())
+        descs = list(prog.descriptors)
+        ki = _idx(prog, KernelDesc)
+        k = descs.pop(ki)
+        descs.insert(_idx(prog, WaitDesc), k)
+        return _with_descs(prog, descs)  # ST007: error severity
+
+    def test_off_skips(self):
+        assert run_verify(self._bad(), "off") == []
+
+    def test_bad_policy_rejected(self):
+        with pytest.raises(ValueError, match="verify must be"):
+            run_verify(self._bad(), "loud")
+
+    def test_error_policy_raises_with_diagnostics(self):
+        with pytest.raises(VerifyError) as e:
+            run_verify(self._bad(), "error")
+        assert e.value.diagnostics
+        assert all(d.severity == "error" for d in e.value.diagnostics)
+
+    def test_warn_policy_warns(self):
+        with pytest.warns(STLintWarning, match=r"\[ST007\]"):
+            run_verify(self._bad(), "warn")
+
+    def test_error_policy_only_warns_on_warning_severity(self):
+        prog = _exchange(_meshx(), wait=False, kernel=False)  # ST005 warn
+        with pytest.warns(STLintWarning, match=r"\[ST005\]"):
+            diags = run_verify(prog, "error")
+        assert [d.rule for d in diags] == ["ST005"]
+
+    def test_build_default_verifies_and_clean_build_is_silent(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            _exchange(_meshx(), verify="warn")
+
+    def test_build_and_compose_reject_bad_policy(self):
+        mesh = _meshx()
+        q = STQueue(mesh, name="w")
+        q.buffer("u", (4,), np.float32, pspec=("x",))
+        q.enqueue_send("u", OffsetPeer("x", 0, periodic=True), tag=0)
+        q.enqueue_recv("u", OffsetPeer("x", 0, periodic=True), tag=0)
+        q.enqueue_start()
+        q.enqueue_wait()
+        with pytest.raises(ValueError, match="verify must be"):
+            q.build(verify="loud")
+        with pytest.raises(ValueError, match="verify must be"):
+            compose(*_linked_pair(mesh), verify="loud")
+
+    def test_diagnostic_formatting(self):
+        d = Diagnostic(rule="ST007", severity="error", pid=1,
+                       message="boom", index=4, site="a.py:9")
+        s = str(d)
+        assert "[ST007]" in s and "desc#4" in s and "enqueued at a.py:9" in s
+        table = format_diagnostics([d])
+        assert "ST007" in table and "boom" in table
+        assert "clean" in format_diagnostics([])
+
+    def test_every_rule_has_catalog_entry(self):
+        import repro.core.verify as V
+        for rule, (sev, _) in RULES.items():
+            assert sev in ("error", "warning")
+            assert rule in V.__doc__
+
+
+# -- enqueue-site provenance (satellite) --------------------------------------
+
+
+class TestProvenance:
+    def test_descriptors_and_channels_carry_sites(self):
+        prog = _exchange(_meshx())
+        for d in prog.descriptors:
+            assert d.site and "test_verify.py" in d.site, d
+        ch = next(ch for b in prog.batches for ch in b.channels)
+        assert ch.send_site and "test_verify.py" in ch.send_site
+        assert ch.recv_site and "test_verify.py" in ch.recv_site
+
+    def test_diagnostics_name_the_enqueue_site(self):
+        prog = _exchange(_meshx())
+        descs = list(prog.descriptors)
+        ki = _idx(prog, KernelDesc)
+        k = descs.pop(ki)
+        descs.insert(_idx(prog, WaitDesc), k)
+        d = next(d for d in verify_program(_with_descs(prog, descs))
+                 if d.rule == "ST007")
+        assert d.site and "test_verify.py" in d.site
+        assert "enqueued at" in str(d)
+
+
+# -- all-green sweep over benchmark-built programs ----------------------------
+
+
+class TestBenchmarkSweep:
+    def test_every_benchmark_program_lints_clean(self):
+        from repro.analysis import lint_all
+        results = lint_all(device_count=1)
+        names = [n for n, _ in results]
+        assert "faces_fig8_1d" in names
+        assert "faces_pipeline_linked_n2" in names
+        assert "serve_admission" in names
+        dirty = {n: [str(d) for d in ds] for n, ds in results if ds}
+        assert not dirty, dirty
+
+
+# -- runtime sanitizer --------------------------------------------------------
+
+
+class TestSanitizer:
+    def _faces(self):
+        cfg = FacesConfig(grid=(1, 1, 1), points=(4, 4, 4), periodic=True)
+        prog = build_faces_program(cfg, _mesh111())
+        u0 = np.random.RandomState(0).randn(1, 1, 1, 4, 4, 4).astype(
+            np.float32)
+        return prog, u0
+
+    def _race(self, prog):
+        """Move a post-wait unpack kernel ahead of the wait."""
+        descs = list(prog.descriptors)
+        wi = max(i for i, d in enumerate(descs) if isinstance(d, WaitDesc))
+        ki = next(i for i, d in enumerate(descs)
+                  if i > wi and isinstance(d, KernelDesc))
+        k = descs.pop(ki)
+        descs.insert(wi, k)
+        return _with_descs(prog, descs)
+
+    def test_canary_buffers_selected(self):
+        prog, _ = self._faces()
+        cbs = canary_buffers(prog)
+        assert cbs  # the halo slots qualify
+        assert "u" not in cbs  # first access is a kernel read
+
+    def test_fused_parity_under_canaries(self):
+        prog, u0 = self._faces()
+        plain = FusedEngine(prog, mode="dataflow")
+        poisoned = FusedEngine(prog, mode="dataflow", sanitize=True)
+        a = plain(plain.init_buffers({"u": u0}))
+        b = poisoned(poisoned.init_buffers({"u": u0}))
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]), err_msg=k)
+
+    def test_persistent_parity_under_canaries(self):
+        prog, u0 = self._faces()
+        pp = prog.persistent(3)
+        plain = PersistentEngine(pp, mode="dataflow")
+        poisoned = PersistentEngine(pp, mode="dataflow", sanitize=True)
+        a = plain(plain.init_buffers({"u": u0}))
+        b = poisoned(poisoned.init_buffers({"u": u0}))
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]), err_msg=k)
+
+    def test_sanitizer_catches_race_unsanitized_accepts(self):
+        prog, u0 = self._faces()
+        bad = self._race(prog)
+        silent = FusedEngine(bad, mode="dataflow")
+        silent(silent.init_buffers({"u": u0}))  # silently wrong
+        loud = FusedEngine(bad, mode="dataflow", sanitize=True)
+        with pytest.raises(SanitizeError, match="pending unwaited deposit"):
+            loud(loud.init_buffers({"u": u0}))
+
+    def test_host_engine_static_sanitize(self):
+        prog, u0 = self._faces()
+        bad = self._race(prog)
+        HostEngine(bad)  # constructs fine unsanitized
+        with pytest.raises(SanitizeError, match="pending unwaited deposit"):
+            HostEngine(bad, sanitize=True)
+        eng = HostEngine(prog, sanitize=True)
+        ref = FusedEngine(prog, mode="dataflow")
+        a = eng(eng.init_buffers({"u": u0}))
+        b = ref(ref.init_buffers({"u": u0}))
+        np.testing.assert_allclose(np.asarray(a["u"]), np.asarray(b["u"]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_check_deposit_order_clean(self):
+        prog, _ = self._faces()
+        check_deposit_order(prog)  # no raise
+
+
+@pytest.mark.slow
+def test_sanitize_parity_8dev(subproc):
+    """Canary path on a real 2×2×2 8-device grid: sanitize=True must stay
+    bit-identical where the fused transfers actually move data."""
+    code = """
+import numpy as np
+from repro.core import FacesConfig, FusedEngine, build_faces_program
+from repro.parallel import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("gx", "gy", "gz"))
+cfg = FacesConfig(grid=(2, 2, 2), points=(6, 6, 6))
+prog = build_faces_program(cfg, mesh)
+u0 = np.random.RandomState(0).randn(2, 2, 2, 6, 6, 6).astype(np.float32)
+a = FusedEngine(prog, mode="dataflow")
+b = FusedEngine(prog, mode="dataflow", sanitize=True)
+ma = a(a.init_buffers({"u": u0}))
+mb = b(b.init_buffers({"u": u0}))
+for k in ma:
+    np.testing.assert_array_equal(np.asarray(ma[k]), np.asarray(mb[k]),
+                                  err_msg=k)
+print("OK")
+"""
+    r = subproc(code)
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout

@@ -44,6 +44,11 @@ import numpy as np
 
 RESULTS: List[Dict] = []
 
+# tuner-chosen knobs per published row ("bench/variant" -> knob dict);
+# benchmarks/run.py stamps this into BENCH_faces.json's _meta so the
+# perf gate pins the choices and flags drift on re-tune
+TUNED_KNOBS: Dict[str, Dict] = {}
+
 
 def _cfg_env(name, default):
     return int(os.environ.get(name, default))
@@ -56,18 +61,15 @@ def _time_engine(engine, mem, inner: int, repeats: int = 5, fresh=None):
     before each repeat *outside* the timed section — required for
     donating engines, whose calls consume their inputs (the ``m =
     engine(m)`` chain donates every intermediate, which is the point).
+
+    The loop itself is the tuner's (:func:`repro.launch.tune.measure`)
+    — one timing implementation for benches and auto-tuning; callers
+    here warm their engines explicitly, so warmup is skipped.
     """
-    import jax
-    times = []
-    for _ in range(repeats):
-        m = fresh() if fresh is not None else dict(mem)
-        t0 = time.perf_counter()
-        for _ in range(inner):
-            m = engine(m)
-        jax.block_until_ready(list(m.values()))
-        times.append(time.perf_counter() - t0)
-    return {"avg_s": float(np.mean(times)), "min_s": float(np.min(times)),
-            "max_s": float(np.max(times)), "med_s": float(np.median(times))}
+    from repro.launch.tune import measure
+    return measure(engine,
+                   fresh if fresh is not None else (lambda: dict(mem)),
+                   inner, repeats, warm=False)
 
 
 def _setup(grid, points, **cfg_kw):
@@ -169,23 +171,40 @@ def fig11(inner=None):
 
 def fig12(inner=None):
     """Trigger tuning: strict stream-memory ops vs relaxed triggers."""
+    from repro.core import FusedEngine
+    from repro.launch.tune import tune
+
     inner = inner or _cfg_env("FACES_INNER", 10)
     _, prog, u0 = _setup((2, 2, 2), (12, 12, 12))
-    v = _variants(prog, u0, inner,
-                  which=("baseline", "st_offload", "st_tuned"))
-    # st_tuned is an *auto-tuner*: it publishes the best measured
-    # trigger-ordering knob for this platform rather than pinning
+    v = _variants(prog, u0, inner, which=("baseline",))
+    # st_tuned is an *auto-tuner*: the generic searcher
+    # (repro.launch.tune) measures the trigger-ordering knob space and
+    # publishes the best knob for this platform rather than pinning
     # `dataflow` — if strict stream ordering measured faster here, that
     # IS the tuned setting (the paper's hand-tuned shaders played the
-    # same game on the NIC side).  The raw dataflow measurement stays
-    # tracked as its own variant so a dataflow-mode regression remains
-    # visible in the trajectory even when the fallback hides it from
-    # the published st_tuned number.
-    v["st_tuned_raw"] = dict(v["st_tuned"], note="knob=dataflow_raw")
-    if v["st_tuned"]["med_s"] <= v["st_offload"]["med_s"]:
-        v["st_tuned"] = dict(v["st_tuned"], note="knob=dataflow")
-    else:
-        v["st_tuned"] = dict(v["st_offload"], note="knob=stream_fallback")
+    # same game on the NIC side).  Both candidates' measurements become
+    # the rows directly: st_offload is the stream candidate, and the
+    # raw dataflow measurement stays tracked as its own variant so a
+    # dataflow-mode regression remains visible in the trajectory even
+    # when the stream fallback hides it from the published st_tuned
+    # number.
+
+    def build(knobs):
+        eng = FusedEngine(prog, mode=knobs.mode, donate=True,
+                          coalesce=knobs.coalesce)
+        return eng, (lambda e=eng: e.init_buffers({"u": u0}))
+
+    res = tune(build, {"mode": ["stream", "dataflow"]}, inner=inner,
+               repeats=5, measure_top=2, engine_kind="fused")
+    by_mode = {c.knobs.mode: c for c in res.measured}
+    v["st_offload"] = dict(by_mode["stream"].stats, dispatches_per_iter=1)
+    v["st_tuned_raw"] = dict(by_mode["dataflow"].stats,
+                             dispatches_per_iter=1, note="knob=dataflow_raw")
+    best_mode = res.best.knobs.mode
+    v["st_tuned"] = dict(
+        res.best.stats, dispatches_per_iter=1,
+        note=f"knob={'dataflow' if best_mode == 'dataflow' else 'stream_fallback'}")
+    TUNED_KNOBS["faces_fig12/st_tuned"] = res.knobs_dict()
     _report("fig12", v, "ST-shader 8% faster than baseline (tuned triggers)")
     return v
 
@@ -406,7 +425,13 @@ def fig_pipeline(inner=None, repeats=5):
     full_disp = engF.stats.dispatches // repeats
 
     # linked N-way: cross-program channels carry the shared faces (and
-    # the stencil's ghost planes), one dispatch for the REAL solve
+    # the stencil's ghost planes), one dispatch for the REAL solve.
+    # Each part count gets TWO rows: `_untuned` pins the default knobs
+    # (round-robin interleave, dataflow) as the regression reference,
+    # and the published linked row is what the generic auto-tuner
+    # (repro.launch.tune) picks over interleave policy × trigger mode.
+    from repro.launch.tune import Knobs, tune as tune_search
+
     rows = [("sequential_2q", seq, seq_disp),
             ("composed_1q", comp, comp_disp),
             ("full_domain_1q", full, full_disp)]
@@ -415,11 +440,15 @@ def fig_pipeline(inner=None, repeats=5):
         progs = [build_faces_part_program(cfg, mesh, k, n_parts,
                                           names=names).persistent(inner)
                  for k in range(n_parts)]
+        parts = split_parts(u0, n_parts)
+
+        def mk_fresh(eng, nm=names, p=parts):
+            return lambda: eng.init_buffers(
+                {f"{n}/u": x for n, x in zip(nm, p)})
+
         engL = PersistentEngine(compose(*progs), mode="dataflow",
                                 donate=True)
-        parts = split_parts(u0, n_parts)
-        freshL = lambda e=engL, p=parts, nm=names: e.init_buffers(
-            {f"{n}/u": x for n, x in zip(nm, p)})
+        freshL = mk_fresh(engL)
         warmL = engL(freshL())
         got = np.asarray(merge_parts([warmL[f"{n}/u"] for n in names]))
         np.testing.assert_allclose(got, full_u, rtol=1e-5, atol=1e-6)
@@ -427,21 +456,55 @@ def fig_pipeline(inner=None, repeats=5):
         linked = _time_engine(engL, None, 1, repeats, fresh=freshL)
         linked_disp = engL.stats.dispatches // repeats
         assert linked_disp == 1, linked_disp
-        rows.append((f"linked_1q_n{n_parts}", linked, linked_disp))
+        rows.append((f"linked_1q_n{n_parts}_untuned", linked, linked_disp))
+
+        def build(knobs, progs=progs, mk=mk_fresh):
+            eng = PersistentEngine(
+                compose(*progs, interleave=knobs.interleave_policy()),
+                mode=knobs.mode, donate=True)
+            return eng, mk(eng)
+
+        res = tune_search(build,
+                          {"interleave": ["round_robin", "sequential", 2],
+                           "mode": ["dataflow", "stream"]},
+                          inner=1, repeats=repeats, measure_top=2)
+        engT, freshT = res.best.engine, res.best.fresh
+        warmT = engT(freshT())  # tuned knobs must not perturb the solve
+        gotT = np.asarray(merge_parts([warmT[f"{n}/u"] for n in names]))
+        np.testing.assert_allclose(gotT, full_u, rtol=1e-5, atol=1e-6)
+        # publish an apples-to-apples number: re-measure the winner
+        # back-to-back with the untuned reference above (the tuner's own
+        # medians come from a different cache/compile context), and if
+        # the head-to-head says the default wins, the tuned choice IS
+        # the default — the published row must never be the slower one.
+        engT.stats.reset()
+        tuned_meas = _time_engine(engT, None, 1, repeats, fresh=freshT)
+        assert engT.stats.dispatches // repeats == 1, engT.stats.dispatches
+        if tuned_meas["med_s"] <= linked["med_s"]:
+            knobs = res.knobs_dict()
+            tuned = dict(tuned_meas, note="knobs=" + res.best.knobs.label())
+        else:
+            knobs = Knobs().asdict()
+            tuned = dict(linked, note="knobs=default_fallback")
+        TUNED_KNOBS[f"faces_pipeline/linked_1q_n{n_parts}"] = knobs
+        rows.append((f"linked_1q_n{n_parts}", tuned, 1))
 
     speedup = seq["avg_s"] / comp["avg_s"] if comp["avg_s"] else float("nan")
     linked2 = next(r for n, r, _ in rows if n == "linked_1q_n2")
     linked_speedup = (full["avg_s"] / linked2["avg_s"]
                       if linked2["avg_s"] else float("nan"))
     for name, r, disp in rows:
+        derived = (f"dispatches_per_loop={disp};"
+                   f"overlap_speedup={speedup:.3f};"
+                   f"linked_vs_full={linked_speedup:.3f}")
+        if r.get("note"):
+            derived += f";{r['note']}"
         RESULTS.append({
             "bench": "faces_pipeline", "variant": name,
             "us_per_call": r["avg_s"] * 1e6,
             "median_ms": r["med_s"] * 1e3,
             "dispatches": disp,
-            "derived": f"dispatches_per_loop={disp};"
-                       f"overlap_speedup={speedup:.3f};"
-                       f"linked_vs_full={linked_speedup:.3f}",
+            "derived": derived,
         })
         print(f"  pipe   {name:15s} avg={r['avg_s']*1e3:9.2f}ms "
               f"med={r['med_s']*1e3:9.2f}ms dispatch/loop={disp}")

@@ -68,16 +68,35 @@ def check_against(faces: dict, path: str) -> int:
     # spuriously (or pass wrongly) at arbitrary mismatched settings.
     stored_meta = stored.get("_meta", {})
     fresh_meta = faces.get("_meta", {})
-    if not stored_meta:
+    # the tuner's chosen knobs ride in _meta but are advisory: only the
+    # LOOP settings decide whether medians are comparable.  Knob drift
+    # (a re-tune at like-for-like settings now picks differently) is a
+    # warning row, never a failure — the recorded file stays the pin
+    # until someone re-records it.
+    stored_knobs = stored_meta.get("tuned_knobs", {})
+    fresh_knobs = fresh_meta.get("tuned_knobs", {})
+    stored_settings = {k: v for k, v in stored_meta.items()
+                       if k != "tuned_knobs"}
+    fresh_settings = {k: v for k, v in fresh_meta.items()
+                      if k != "tuned_knobs"}
+    if not stored_settings:
         compare_medians = False
         print("note: recorded file has no _meta settings stamp — median "
               "checks skipped (invariants only); re-record it to enable them")
-    elif stored_meta != fresh_meta:
+    elif stored_settings != fresh_settings:
         compare_medians = False
-        print(f"note: settings differ from recorded ({fresh_meta} vs "
-              f"{stored_meta}) — median checks skipped, invariants enforced")
+        print(f"note: settings differ from recorded ({fresh_settings} vs "
+              f"{stored_settings}) — median checks skipped, invariants "
+              f"enforced")
     else:
         compare_medians = True
+    if compare_medians and stored_knobs:
+        for row in sorted(set(stored_knobs) | set(fresh_knobs)):
+            if stored_knobs.get(row) != fresh_knobs.get(row):
+                print(f"WARNING knob-drift {row}: recorded "
+                      f"{stored_knobs.get(row)} vs re-tuned "
+                      f"{fresh_knobs.get(row)} — a re-tune now picks "
+                      f"differently; re-record {path} to pin the new choice")
 
     def tracked(key):
         f, s = faces.get(key), stored.get(key)
@@ -116,6 +135,15 @@ def check_against(faces: dict, path: str) -> int:
             f"faces_fig12/st_tuned ({tuned['median_ms']:.1f}ms) is slower "
             f"than untuned st_offload ({offl['median_ms']:.1f}ms): the "
             f"auto-tuner must never publish a slower number")
+    for n in (2, 4):
+        t = faces.get(f"faces_pipeline/linked_1q_n{n}")
+        u = faces.get(f"faces_pipeline/linked_1q_n{n}_untuned")
+        if t and u and t["median_ms"] > u["median_ms"] * 1.05:
+            failures.append(
+                f"faces_pipeline/linked_1q_n{n} ({t['median_ms']:.1f}ms) is "
+                f"slower than its untuned reference "
+                f"({u['median_ms']:.1f}ms): the auto-tuner must never "
+                f"publish a slower linked row")
     if failures:
         # stderr + flush: the non-zero exit must never be near-silent in
         # CI logs — name every failing row, then a one-line summary
@@ -130,7 +158,8 @@ def check_against(faces: dict, path: str) -> int:
     print(f"\nperf gate OK: {checked} tracked medians within "
           f"{(CHECK_TOLERANCE-1)*100:.0f}% of {path} "
           f"(speed-normalized x{speed:.2f}); invariants hold "
-          f"(persistent <= fused, tuned <= offload)")
+          f"(persistent <= fused, tuned <= offload, "
+          f"tuned linked <= untuned)")
     return 0
 
 
@@ -164,6 +193,17 @@ def main() -> None:
         rows = roofline_mod.main(None)
         for r in rows:
             if "skipped" in r:
+                continue
+            if "st_program" in r:  # cost-model rows carry their own shape
+                meas = r.get("measured_ms")
+                results.append({
+                    "bench": "roofline_st", "variant": r["st_program"],
+                    "us_per_call": r["predicted_us"],
+                    "derived": f"predicted_us={r['predicted_us']:.0f};"
+                               f"measured_ms="
+                               f"{'-' if meas is None else f'{meas:.2f}'};"
+                               f"bench_row={r['bench_row']}",
+                })
                 continue
             results.append({
                 "bench": "roofline", "variant": f"{r['arch']}/{r['shape']}",
@@ -200,6 +240,10 @@ def main() -> None:
             "faces_inner": int(os.environ.get("FACES_INNER", 10)),
             "faces_max_iters": int(os.environ.get("FACES_MAX_ITERS", 64)),
         }
+        if faces_bench.TUNED_KNOBS:
+            # tuner-chosen knobs per published row: pinned by the gate's
+            # knob-drift warning above
+            faces["_meta"]["tuned_knobs"] = faces_bench.TUNED_KNOBS
     # machine-readable serve trajectory (tok/s, latency, dispatches),
     # tracked at the repo root like BENCH_faces.json
     serve = serve_bench.collect(results)

@@ -13,6 +13,11 @@ independent per-queue runs — plus the LINKED composition
 (exchange=True cross-program channels), checked bit-for-bit against
 the single-queue full-domain run.
 
+``--tune`` smokes the budgeted auto-tuner (`repro.launch.tune`): a
+two-candidate search over the linked n=2 composition on the smoke grid
+— every candidate must lint clean, and the tuned winner must measure no
+slower than the untuned default (which is in the candidate set).
+
 ``--serve`` smokes the device-resident serving path
 (`repro.launch.serve`): greedy decode for a fixed-length batch as ONE
 host dispatch, bit-identical to the host-stepped loop; per-sequence EOS
@@ -40,6 +45,8 @@ args.add_argument("--pipeline", action="store_true",
                   help="also smoke the composed 2-queue pipelined dispatch")
 args.add_argument("--serve", action="store_true",
                   help="also smoke the device-resident serving path")
+args.add_argument("--tune", action="store_true",
+                  help="also smoke the budgeted auto-tuner on linked n=2")
 args = args.parse_args()
 
 N = 5
@@ -147,6 +154,42 @@ if args.pipeline:
         print(f"pipelined[linked n={n_parts}] OK bit-identical to "
               f"full-domain, dispatches=1")
     print("PIPELINE SMOKE PASS")
+
+if args.tune:
+    # budgeted auto-tune: linked n=2 on the smoke grid, two candidates
+    # with the untuned default (round_robin + dataflow) among them —
+    # "tuned never slower than untuned" then holds by construction,
+    # because the winner is the measured minimum over a set containing
+    # the default.  Every candidate must build and lint clean (tune()
+    # refuses to time an invalid program).
+    from repro.core import merge_parts, part_names
+    tcfg = FacesConfig(grid=(2, 2, 2), points=(6, 4, 4))
+    tu0 = rng.randn(2, 2, 2, 6, 4, 4).astype(np.float32)
+    TN = 4
+    space = {"interleave": ["round_robin", "sequential"],
+             "mode": ["dataflow"]}
+    tmem, tstats, tres = run_faces_pipelined(
+        tcfg, mesh, tu0, n_iters=TN, n_parts=2, tune=True,
+        tune_space=space, tune_repeats=3, tune_measure_top=2)
+    assert tstats.dispatches == 1, tstats.dispatches
+    assert all(c.error is None for c in tres.candidates), \
+        [c.error for c in tres.candidates]
+    untuned = next(c for c in tres.measured
+                   if c.knobs.interleave == "round_robin"
+                   and c.knobs.mode == "dataflow")
+    best = tres.best
+    assert best.stats["med_s"] <= untuned.stats["med_s"], \
+        (best.knobs.label(), best.stats["med_s"], untuned.stats["med_s"])
+    full, _ = run_faces_persistent(tcfg, mesh, tu0, n_iters=TN)
+    got = np.asarray(merge_parts(
+        [tmem[f"{nm}/u"] for nm in part_names(2)]))
+    np.testing.assert_allclose(got, np.asarray(full["u"]),
+                               rtol=1e-5, atol=1e-6)
+    print(f"tune[linked n=2] OK best=[{best.knobs.label()}] "
+          f"med={best.stats['med_s']*1e3:.2f}ms vs untuned "
+          f"{untuned.stats['med_s']*1e3:.2f}ms; "
+          f"{len(tres.candidates)} candidates built+linted clean")
+    print("TUNE SMOKE PASS")
 
 if args.serve:
     # device-resident serving: fixed-length decode as ONE dispatch,

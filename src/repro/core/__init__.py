@@ -74,7 +74,8 @@ from .matching import (
     match_batch,
 )
 from .queue import QueueError, STProgram, STQueue, create_queue
-from .schedule import Link, ScheduleError, STSchedule, SubProgram, compose
+from .schedule import (INTERLEAVE_POLICIES, InterleavePolicy, Link,
+                       ScheduleError, STSchedule, SubProgram, compose)
 from .verify import (
     Diagnostic,
     SanitizeError,
@@ -88,6 +89,7 @@ from .verify import (
 __all__ = [
     "STQueue", "STProgram", "create_queue", "QueueError",
     "STSchedule", "SubProgram", "compose", "ScheduleError", "Link",
+    "InterleavePolicy", "INTERLEAVE_POLICIES",
     "FusedEngine", "HostEngine", "HostStats", "PersistentEngine",
     "OffsetPeer", "GridOffsetPeer", "PairListPeer",
     "SendDesc", "RecvDesc", "CollDesc", "KernelDesc", "StartDesc", "WaitDesc",

@@ -86,6 +86,25 @@ def _linear_rank(axes: Tuple[str, ...], mesh_shape: Dict[str, int]):
     return idx
 
 
+def _is_full_identity(perm, axes: Tuple[str, ...],
+                      mesh_shape: Dict[str, int]) -> bool:
+    """True iff ``perm`` maps EVERY rank along ``axes`` to itself.
+
+    Such a ppermute returns its operand bit-for-bit on every rank, so
+    the collective can be elided — the payload is already in place.
+    (A *partial* identity does not qualify: unmatched ranks would have
+    received zeros, so the ppermute still changes data.)  Identity
+    channels are how a part's own ghost planes ride the trigger/wait
+    machinery (``GridOffsetPeer(axes, (0,..,0))``); eliding the
+    collective keeps their counter semantics while costing only the
+    pack/deposit copies.
+    """
+    n = 1
+    for a in axes:
+        n *= mesh_shape[a]
+    return len(perm) == n and all(s == d for s, d in perm)
+
+
 class FusedEngine:
     """Compile & run an STProgram as one fused XLA program."""
 
@@ -438,7 +457,11 @@ def _run_channel(mem, ch: Channel, token, mesh_shape, fallbacks=None):
     # DWQ deferred execution: operand depends on the trigger counter.
     _, (src,) = counters.tie(token, src)
     perm = ch.perm(mesh_shape)
-    received = jax.lax.ppermute(src, axes if len(axes) > 1 else axes[0], perm)
+    if _is_full_identity(perm, axes, mesh_shape):
+        received = src  # every rank keeps its payload: collective elided
+    else:
+        received = jax.lax.ppermute(
+            src, axes if len(axes) > 1 else axes[0], perm)
     mem = _deposit_channel(mem, ch, received, mesh_shape, fallbacks=fallbacks)
     return mem, received
 
@@ -478,7 +501,10 @@ def _run_coalesced_batch(mem, plan, token, mesh_shape, fallbacks=None):
         staged = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         # DWQ deferred execution: ONE tie for the whole fused transfer.
         _, (staged,) = counters.tie(token, staged)
-        received.append(jax.lax.ppermute(staged, t.axis, t.perm))
+        if _is_full_identity(t.perm, _axes_tuple(t.axis), mesh_shape):
+            received.append(staged)  # full identity: collective elided
+        else:
+            received.append(jax.lax.ppermute(staged, t.axis, t.perm))
 
     for ci, ch in enumerate(plan.channels):
         route = plan.routes[ci]

@@ -202,6 +202,12 @@ class PersistentEngine(FusedEngine):
         Alternate message-slot copies between iterations (default: on in
         ``dataflow`` mode).  The loop is unrolled ×2 so consecutive
         iterations coexist in the loop body and XLA may overlap them.
+    unroll:
+        Explicit ``fori_loop`` unroll factor for the fixed-count
+        persistent loop (a :mod:`repro.launch.tune` knob).  ``None``
+        (default) derives it from ``double_buffer`` as above; the value
+        never changes numerics, only how many iteration bodies XLA
+        schedules together.
     reduce_fn:
         Optional ``fn(mem) -> scalar`` evaluated after every iteration
         *inside* the device loop (use ``jax.lax.psum`` over the mesh
@@ -245,6 +251,7 @@ class PersistentEngine(FusedEngine):
         donate: bool = False,
         coalesce: bool = True,
         sanitize: bool = False,
+        unroll: Optional[int] = None,
     ):
         super().__init__(program, mode=mode, donate=donate, coalesce=coalesce,
                          sanitize=sanitize)
@@ -314,6 +321,13 @@ class PersistentEngine(FusedEngine):
         self._slots: Tuple[str, ...] = (
             slot_buffers(program) if self.double_buffer else ()
         )
+        # persistent-loop unroll (fori_loop path only): default pairs
+        # consecutive iterations exactly when double buffering gives
+        # them independent slots; an explicit value is a tuner knob
+        # (repro.launch.tune) — numerics are unaffected either way.
+        if unroll is not None and int(unroll) < 1:
+            raise ValueError(f"unroll must be >= 1, got {unroll}")
+        self.unroll = None if unroll is None else int(unroll)
 
     # (__call__ inherited: FusedEngine already counts one dispatch per
     # call — which here covers ALL n_iters iterations.)
@@ -362,7 +376,8 @@ class PersistentEngine(FusedEngine):
                 n_iters=self.n_iters,
                 slots=self._slots,
                 reduce_fn=self.reduce_fn,
-                unroll=2 if (self.double_buffer and self.n_iters > 1) else 1,
+                unroll=self.unroll if self.unroll is not None
+                else (2 if (self.double_buffer and self.n_iters > 1) else 1),
                 coalesce=self.coalesce,
                 sanitize=self.sanitize,
             )

@@ -52,7 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -590,7 +590,11 @@ def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
                         double_buffer: Optional[bool] = None,
                         donate: bool = True,
                         n_parts: int = 2,
-                        exchange: bool = True):
+                        exchange: bool = True,
+                        tune: bool = False,
+                        tune_space: Optional[Dict[str, Sequence]] = None,
+                        tune_repeats: int = 3,
+                        tune_measure_top: int = 3):
     """N x-split Faces queues, composed, iterated in ONE dispatch.
 
     The domain is split into ``n_parts`` x-parts (uneven sizes OK) on
@@ -628,6 +632,18 @@ def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
       converged part freezes while its neighbors keep reading its
       frozen boundary (the masked multi-queue loop), so the combined
       field is a staged, not simultaneous, solve.
+
+    With ``tune=True`` the execution configuration is auto-tuned by
+    :func:`repro.launch.tune.tune` before the real run: candidates over
+    ``tune_space`` (default: interleave policy × trigger mode, seeded
+    from the ``mode``/``double_buffer`` arguments) are priced by the
+    cost model, the ``tune_measure_top`` cheapest are measured
+    (``tune_repeats`` medians each), and the winner runs.  The knobs
+    never change numerics — only lowering and schedule — so the
+    returned fields are the same solve either way.  The return value
+    grows a trailing :class:`~repro.launch.tune.TuneResult`:
+    ``(mem, stats, tuned)`` / ``(mem, residuals, n_done, stats,
+    tuned)``.
     """
     from .engine_persistent import PersistentEngine
     from .schedule import compose
@@ -657,30 +673,56 @@ def run_faces_pipelined(cfg: FacesConfig, mesh, u0, *,
 
     if tols is None:
         progs = [b.persistent(n_iters) for b in builders]
-        sched = compose(*progs, links=links)
-        eng = PersistentEngine(sched, mode=mode, double_buffer=double_buffer,
-                               donate=donate)
-        mem = eng(eng.init_buffers(init))
-        return mem, eng.stats
+        reduce_fns = None
+    else:
+        if max_iters is None:
+            raise ValueError("tols= requires max_iters=")
+        if len(tols) != n_parts:
+            raise ValueError(
+                f"tols needs one tolerance per part ({n_parts}), got {tols!r}")
+        progs = [
+            b.persistent(max_iters, until=lambda r, tol=tol: r >= tol)
+            for b, tol in zip(builders, tols)
+        ]
+        reduce_fns = {nm: global_residual_fn(cfgk, buf=f"{nm}/u")
+                      for nm, cfgk in zip(names, cfgs)}
 
-    if max_iters is None:
-        raise ValueError("tols= requires max_iters=")
-    if len(tols) != n_parts:
-        raise ValueError(
-            f"tols needs one tolerance per part ({n_parts}), got {tols!r}")
-    progs = [
-        b.persistent(max_iters, until=lambda r, tol=tol: r >= tol)
-        for b, tol in zip(builders, tols)
-    ]
-    sched = compose(*progs, links=links)
-    eng = PersistentEngine(
-        sched, mode=mode, double_buffer=double_buffer, donate=donate,
-        reduce_fns={nm: global_residual_fn(cfgk, buf=f"{nm}/u")
-                    for nm, cfgk in zip(names, cfgs)})
+    def make_engine(interleave=None, **engine_kw):
+        sched = compose(*progs, links=links, interleave=interleave)
+        kw = dict(mode=mode, double_buffer=double_buffer)
+        kw.update(engine_kw)
+        return PersistentEngine(sched, donate=donate,
+                                reduce_fns=reduce_fns, **kw)
+
+    tuned = None
+    if tune:
+        from repro.launch.tune import Knobs, tune as tune_search
+
+        def build(knobs: "Knobs"):
+            eng = make_engine(interleave=knobs.interleave_policy(),
+                              **knobs.engine_kwargs())
+            return eng, (lambda e=eng: e.init_buffers(init))
+
+        tuned = tune_search(
+            build,
+            tune_space or {"interleave": ["round_robin", "sequential", 2],
+                           "mode": ["dataflow", "stream"]},
+            base=Knobs(mode=mode, double_buffer=double_buffer),
+            repeats=tune_repeats, measure_top=tune_measure_top)
+        eng = tuned.best.engine
+        eng.stats.reset()  # returned stats cover the real solve only
+    else:
+        eng = make_engine()
+
+    if tols is None:
+        mem = eng(eng.init_buffers(init))
+        return (mem, eng.stats, tuned) if tune else (mem, eng.stats)
+
     mem, reds, n_done = eng(eng.init_buffers(init))
     n_done = {nm: int(v) for nm, v in n_done.items()}
     reds = {nm: np.asarray(r)[: n_done[nm]] for nm, r in reds.items()}
-    return mem, reds, n_done, eng.stats
+    return ((mem, reds, n_done, eng.stats, tuned) if tune
+            else (mem, reds, n_done, eng.stats))
 
 
 # --------------------------------------------------------------------------

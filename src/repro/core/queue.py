@@ -39,6 +39,14 @@ MPIX_Enqueue_wait       ``queue.enqueue_wait()``
                         debugger the NIC's offloaded DWQ does not have;
                         ``engine(..., sanitize=True)`` adds the runtime
                         NaN-canary sanitizer
+(§V-C hand-tuned        ``repro.launch.tune.tune``: a generic knob search
+ shaders)               (trigger mode, coalescing, interleave policy,
+                        double-buffer/unroll) over a built program —
+                        candidates priced by the analytic cost model
+                        (``repro.launch.costing.schedule_cost``),
+                        STLint-verified, the cheapest few measured; the
+                        software analogue of tuning the NIC's trigger
+                        shaders by hand, made self-optimizing
 (ML serving face)       ``repro.launch.serve.ServeEngine``: greedy decode
                         as a device-resident masked while_loop (ONE host
                         dispatch per chunk, per-sequence EOS/max-len

@@ -178,11 +178,75 @@ def _segments(descs) -> List[List[Any]]:
     return segs
 
 
+@dataclasses.dataclass(frozen=True)
+class InterleavePolicy:
+    """How :func:`_interleave` merges the programs' segment lists.
+
+    ``order`` is the program visitation order per round (a permutation
+    of pids; ``None`` means ``0..N-1``).  ``granularity`` is how many
+    segments one program emits per turn before yielding — 1 is the
+    classic fine-grained round-robin, larger values trade interleaving
+    depth for fewer context switches in the fused stream, and a value
+    >= every program's segment count degenerates to sequential
+    concatenation (each program runs to completion, links permitting).
+    Both are discrete tuner knobs (see :mod:`repro.launch.tune`).
+    """
+
+    order: Optional[Tuple[int, ...]] = None
+    granularity: int = 1
+
+    def visit_order(self, n_programs: int) -> Tuple[int, ...]:
+        if self.order is None:
+            return tuple(range(n_programs))
+        if sorted(self.order) != list(range(n_programs)):
+            raise ScheduleError(
+                f"interleave order {self.order} is not a permutation of "
+                f"0..{n_programs - 1}")
+        return self.order
+
+
+#: Named policies accepted anywhere an :class:`InterleavePolicy` is
+#: (``compose(interleave=...)``): ``"round_robin"`` is the historical
+#: default; ``"sequential"`` concatenates programs whole.
+INTERLEAVE_POLICIES: Dict[str, InterleavePolicy] = {
+    "round_robin": InterleavePolicy(),
+    "sequential": InterleavePolicy(granularity=1_000_000_000),
+}
+
+
+def _resolve_policy(policy) -> InterleavePolicy:
+    if policy is None:
+        return INTERLEAVE_POLICIES["round_robin"]
+    if isinstance(policy, InterleavePolicy):
+        if policy.granularity < 1:
+            raise ScheduleError(
+                f"interleave granularity must be >= 1, got "
+                f"{policy.granularity}")
+        return policy
+    if isinstance(policy, str):
+        try:
+            return INTERLEAVE_POLICIES[policy]
+        except KeyError:
+            raise ScheduleError(
+                f"unknown interleave policy {policy!r} (named policies: "
+                f"{sorted(INTERLEAVE_POLICIES)}; or pass an "
+                f"InterleavePolicy)") from None
+    raise ScheduleError(
+        f"interleave= takes a policy name or InterleavePolicy, got "
+        f"{type(policy).__name__}")
+
+
 def _interleave(
     per_prog_segments: List[List[List[Any]]],
     constraints: Optional[Dict[Tuple[int, int], set]] = None,
+    policy: Optional[InterleavePolicy] = None,
 ) -> Tuple[Any, ...]:
-    """Round-robin merge of the programs' segment lists.
+    """Policy-driven merge of the programs' segment lists.
+
+    The default policy is the classic fine-grained round-robin (each
+    program emits one segment per turn, in pid order).  ``policy``
+    varies the visitation ``order`` and per-turn ``granularity`` — see
+    :class:`InterleavePolicy`.
 
     ``constraints`` maps a segment ``(pid, seg_idx)`` to the set of
     segments that must be emitted *before* it — used to keep every
@@ -190,27 +254,31 @@ def _interleave(
     of the consumer's gating ``wait`` segment.  A blocked segment is
     deferred to a later round (per-program FIFO order is never
     reordered — the program simply yields its turn); with no
-    constraints this degenerates to the plain round-robin merge.  An
+    constraints this degenerates to the policy's plain merge.  An
     unsatisfiable cycle raises :class:`ScheduleError`.
     """
     constraints = constraints or {}
+    policy = _resolve_policy(policy)
+    order = policy.visit_order(len(per_prog_segments))
     out: List[Any] = []
     ptr = [0] * len(per_prog_segments)
     emitted: set = set()
     remaining = sum(len(s) for s in per_prog_segments)
     while remaining:
         progress = False
-        for p, segs in enumerate(per_prog_segments):
-            if ptr[p] >= len(segs):
-                continue
-            need = constraints.get((p, ptr[p]), ())
-            if any(pre not in emitted for pre in need):
-                continue  # blocked on a link's trigger — yield this round
-            out.extend(segs[ptr[p]])
-            emitted.add((p, ptr[p]))
-            ptr[p] += 1
-            remaining -= 1
-            progress = True
+        for p in order:
+            segs = per_prog_segments[p]
+            for _ in range(policy.granularity):
+                if ptr[p] >= len(segs):
+                    break
+                need = constraints.get((p, ptr[p]), ())
+                if any(pre not in emitted for pre in need):
+                    break  # blocked on a link's trigger — yield this round
+                out.extend(segs[ptr[p]])
+                emitted.add((p, ptr[p]))
+                ptr[p] += 1
+                remaining -= 1
+                progress = True
         if not progress:
             stuck = [(p, ptr[p]) for p in range(len(per_prog_segments))
                      if ptr[p] < len(per_prog_segments[p])]
@@ -224,6 +292,7 @@ def _interleave(
 
 def compose(*programs: STProgram, name: Optional[str] = None,
             links: Optional[Sequence[Tuple[str, str]]] = None,
+            interleave: Any = None,
             verify: str = "error") -> STSchedule:
     """Fuse N matched STPrograms into one :class:`STSchedule`.
 
@@ -247,6 +316,15 @@ def compose(*programs: STProgram, name: Optional[str] = None,
     The interleaving keeps every link's trigger ahead of its consumer's
     gating wait.  ``links=[(src, dst), ...]`` optionally declares the
     expected program pairs; the realized pairs must match exactly.
+
+    ``interleave`` selects the segment-merge policy: a name from
+    :data:`INTERLEAVE_POLICIES` (``"round_robin"`` — the default —
+    or ``"sequential"``) or an :class:`InterleavePolicy` with an
+    explicit program visitation ``order`` and per-turn ``granularity``.
+    The policy is a tuner knob (:mod:`repro.launch.tune`); whatever the
+    policy, link constraints and per-program FIFO order always hold,
+    and the finished schedule still passes through ``verify`` below —
+    an invalid interleaving can never leave this function silently.
 
     Raises :class:`ScheduleError` for programs on different meshes,
     duplicate program names (cross-program buffer aliasing — composing
@@ -447,7 +525,8 @@ def compose(*programs: STProgram, name: Optional[str] = None,
 
     sched = STSchedule(
         buffers=buffers,
-        descriptors=_interleave(per_prog_segments, constraints),
+        descriptors=_interleave(per_prog_segments, constraints,
+                                policy=_resolve_policy(interleave)),
         batches=tuple(batches),
         mesh=mesh,
         name=name or "+".join(names),

@@ -13,10 +13,12 @@ from .steps import (
     pipelined_steps,
 )
 from .serve import ServeEngine, serve, serve_continuous
+from .tune import Knobs, TuneResult, tune
 
 __all__ = ["make_production_mesh", "make_host_mesh", "StepBundle",
            "build_bundle", "build_train_step", "build_prefill_step",
            "build_serve_step", "build_persistent_train_step",
            "build_pipelined_train_step",
            "persistent_steps", "pipelined_steps", "loss_plateau",
-           "ServeEngine", "serve", "serve_continuous"]
+           "ServeEngine", "serve", "serve_continuous",
+           "Knobs", "TuneResult", "tune"]

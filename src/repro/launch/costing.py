@@ -1,39 +1,366 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Analytic cost models: ST schedules + calibrated model-arch roofline.
 
-"""Calibrated roofline costing (companion to dryrun.py).
+Two halves share this module:
 
-``cost_analysis()`` on a scanned-layers program counts the loop body
-ONCE, undercounting FLOPs/bytes/collectives by ~n_layers.  This module
-compiles small **unrolled** variants and extrapolates:
+**ST schedule costing** (:func:`schedule_cost`, top half) — an analytic
+price for a built :class:`~repro.core.queue.STProgram` /
+:class:`~repro.core.schedule.STSchedule` under a chosen execution
+configuration (engine / mode / coalesce / …).  It walks the descriptor
+stream in symbolic stream order — the same per-pid start/wait execution
+the STLint verifier (:mod:`repro.core.verify`) performs, but
+accumulating microseconds instead of diagnostics:
 
-* ``unrolled`` mode (shallow/narrow archs): unroll the real depth — the
-  costs are exact.
-* ``calibrated`` mode (80-layer giants): unroll L₂ and L₄ layers
-  (L₄ = 2·L₂); per-layer cost = (C(L₄) − C(L₂)) / (L₄ − L₂); total =
-  C(L₂) + per_layer × (L − L₂).  Linear in depth by construction of the
-  stacks (every layer is structurally identical within a segment).
+* **bytes moved × hops** per fired collective — coalesced batches price
+  their :class:`~repro.core.matching.CoalescePlan` transfers (one
+  single-axis hop each, full-identity transfers elided exactly like the
+  fused engine elides them); per-channel batches price one multi-axis
+  ppermute per channel, scaled by its hop count;
+* **collectives per start gate** — a fixed launch cost per fired
+  collective (why coalesced < uncoalesced);
+* **staging/slot pressure** — pack/deposit copy bytes through the
+  contiguous staging buffers, plus the message-slot footprint the
+  persistent engine double-buffers;
+* **trigger→wait overlap** — compute priced *between* a trigger and its
+  gating wait credits against that window's in-flight communication;
+  what the credit cannot hide is charged as exposed wait time
+  (per-segment critical path);
+* **stream switches** — consecutive descriptors from different
+  sub-programs cost a scheduling switch, which is what makes the
+  interleave policy (:class:`~repro.core.schedule.InterleavePolicy`) a
+  priceable knob;
+* **host dispatches** — per-dispatch round-trips under the chosen
+  engine (why persistent < fused < host).
 
-Artifacts land in ``artifacts/costing/*.json``; benchmarks/roofline.py
-prefers them over the scanned dry-run numbers.
+The constants (:class:`CostParams`) are calibrated against the CPU
+host-device grid the benchmarks run on; only *orderings* are trusted
+(predict-then-measure: the model prunes the tuner's candidate space in
+:mod:`repro.launch.tune`, medians decide — and
+``benchmarks/roofline.py`` prints predicted-vs-measured rows for the
+program registry).  Costs depend only on program *structure*, never on
+buffer or program names (rename-invariant, property-tested).
+
+**Model-arch costing** (:func:`run_one`, bottom half) — calibrated
+roofline costing for the scanned-layers training programs (companion to
+dryrun.py).  ``cost_analysis()`` on a scanned-layers program counts the
+loop body ONCE, undercounting FLOPs/bytes/collectives by ~n_layers;
+this half compiles small **unrolled** variants and extrapolates
+(``calibrated`` mode: per-layer cost from an L₂/L₄ pair).  Artifacts
+land in ``artifacts/costing/*.json``; benchmarks/roofline.py prefers
+them over the scanned dry-run numbers.  Running this half standalone
+(``python -m repro.launch.costing``) forces the 512-device dry-run
+grid; merely importing the module no longer touches ``XLA_FLAGS`` (the
+ST half must be importable from tests and benches that set their own
+device count).
 """
 
-import argparse
 import dataclasses
-import json
-import time
-import traceback
-
-import jax
-
-from repro.configs.base import ARCH_IDS, SHAPES, get_config
-from repro.launch.dryrun import SKIPS
-from repro.launch.hlo_analysis import analyze_collectives, analyze_dots
-from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import build_bundle
+import os
+from typing import Any, Dict, List, Optional, Tuple
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                          "artifacts", "costing")
+
+
+# =========================================================================
+# ST schedule cost model
+# =========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Calibrated unit costs (µs) for the CPU host-device grid.
+
+    Absolute values are rough; the model is used for *ordering* and
+    pruning (measurements decide winners).  Calibration anchors, from
+    BENCH_faces.json on the recorded grid: per-op host dispatch ≈
+    0.6 ms; one fused collective ≈ 20 µs of launch overhead beyond its
+    bytes; a lowered kernel/pack op ≈ 3 µs; a sub-program switch in the
+    fused stream ≈ 7 µs.
+    """
+
+    dispatch_us: float = 1000.0    # host round-trip per dispatch
+    collective_us: float = 20.0    # fixed launch cost per fired collective
+    kernel_us: float = 3.0         # fixed cost per lowered kernel op
+    byte_us: float = 1e-4          # per byte through a collective, per hop
+    compute_byte_us: float = 2e-5  # per byte a kernel touches
+    stage_byte_us: float = 3e-5    # per byte packed/deposited (staging copy)
+    slot_byte_us: float = 1e-5     # per slot-resident byte, per iteration
+    switch_us: float = 7.0         # per adjacent-descriptor pid switch
+    overlap_eff: float = 0.6       # fraction of in-window compute hiding comm
+
+
+DEFAULT_PARAMS = CostParams()
+
+_ENGINE_ORDER = ("host", "fused", "persistent")
+
+
+@dataclasses.dataclass
+class ScheduleCost:
+    """Itemized analytic cost of one execution configuration.
+
+    All time components are µs for the whole ``n_iters`` run;
+    ``total_us`` is their sum.  Counts are per iteration.
+    """
+
+    engine: str
+    mode: str
+    coalesce: bool
+    n_iters: int
+    dispatch_us: float = 0.0
+    collective_us: float = 0.0
+    bytes_us: float = 0.0
+    kernel_us: float = 0.0
+    staging_us: float = 0.0
+    slot_us: float = 0.0
+    exposed_us: float = 0.0
+    switch_us: float = 0.0
+    n_dispatches: int = 0
+    n_collectives: int = 0      # fired per iteration (post-elision)
+    n_elided: int = 0           # full-identity transfers skipped
+    n_kernels: int = 0
+    bytes_moved: int = 0        # through collectives, per iteration
+    staged_bytes: int = 0       # packed+deposited, per iteration
+    slot_bytes: int = 0         # message-slot footprint (double-buffered)
+
+    @property
+    def total_us(self) -> float:
+        return (self.dispatch_us + self.collective_us + self.bytes_us
+                + self.kernel_us + self.staging_us + self.slot_us
+                + self.exposed_us + self.switch_us)
+
+    def row(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["total_us"] = self.total_us
+        return d
+
+
+def _buf_bytes(spec, mesh_shape) -> int:
+    import numpy as np
+    from repro.core.matching import _local_shape
+    shape = _local_shape(spec, mesh_shape)
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(spec.dtype).itemsize
+
+
+def _send_bytes(ch, buffers, mesh_shape) -> int:
+    import numpy as np
+    from repro.core.matching import _NoCoalesce, _send_shape
+    try:
+        shape = _send_shape(ch, buffers, mesh_shape)
+    except _NoCoalesce:
+        from repro.core.matching import _local_shape
+        shape = _local_shape(buffers[ch.src_buf], mesh_shape)
+    itemsize = np.dtype(buffers[ch.src_buf].dtype).itemsize
+    return int(np.prod(shape, dtype=np.int64)) * itemsize
+
+
+def _identity_perm(perm, axes, mesh_shape) -> bool:
+    n = 1
+    for a in axes:
+        n *= mesh_shape[a]
+    return len(perm) == n and all(s == d for s, d in perm)
+
+
+def _axes_of(axis) -> Tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _price_batch(batch, buffers, mesh_shape, axis_order, coalesce,
+                 params: CostParams):
+    """Price one start gate: (comm_us, cost-component deltas).
+
+    Mirrors the fused engine's lowering choice: a plan-carrying batch
+    fires its fused transfers (identity transfers elided), otherwise one
+    ppermute per channel (identity channels elided), plus whole-buffer
+    collectives either way.
+    """
+    import numpy as np
+    from repro.core.descriptors import hop_decomposition
+    comm_us = coll_us = byte_us = stage_us = 0.0
+    n_coll = n_elided = 0
+    bytes_moved = staged = 0
+    if coalesce and batch.plan is not None:
+        plan = batch.plan
+        for t in plan.transfers:
+            itemsize = np.dtype(t.dtype).itemsize
+            nbytes = sum(s.size for s in t.segments) * itemsize
+            stage_us += nbytes * params.stage_byte_us  # pack copy
+            staged += nbytes
+            if _identity_perm(t.perm, _axes_of(t.axis), mesh_shape):
+                n_elided += 1
+                continue
+            n_coll += 1
+            coll_us += params.collective_us
+            byte_us += nbytes * params.byte_us
+            bytes_moved += nbytes
+        for ci, ch in enumerate(plan.channels):
+            itemsize = np.dtype(buffers[ch.dst_buf].dtype).itemsize
+            nbytes = int(np.prod(plan.shapes[ci], dtype=np.int64)) * itemsize
+            stage_us += nbytes * params.stage_byte_us  # deposit copy
+            staged += nbytes
+    else:
+        for ch in batch.channels:
+            nbytes = _send_bytes(ch, buffers, mesh_shape)
+            axes = _axes_of(ch.axis)
+            if _identity_perm(ch.perm(mesh_shape), axes, mesh_shape):
+                n_elided += 1
+                stage_us += nbytes * params.stage_byte_us
+                staged += nbytes
+                continue
+            hops = hop_decomposition(ch.peer, axis_order)
+            n_hops = len(hops) if hops else max(1, len(axes))
+            n_coll += 1
+            coll_us += params.collective_us
+            byte_us += nbytes * params.byte_us * n_hops
+            bytes_moved += nbytes
+    for coll in batch.colls:
+        nbytes = _buf_bytes(buffers[coll.buf], mesh_shape)
+        n_coll += 1
+        coll_us += params.collective_us
+        byte_us += nbytes * params.byte_us
+        bytes_moved += nbytes
+    comm_us = coll_us + byte_us
+    return comm_us, coll_us, byte_us, stage_us, n_coll, n_elided, \
+        bytes_moved, staged
+
+
+def schedule_cost(
+    prog,
+    *,
+    engine: str = "persistent",
+    mode: str = "dataflow",
+    coalesce: bool = True,
+    double_buffer: Optional[bool] = None,
+    n_iters: Optional[int] = None,
+    params: CostParams = DEFAULT_PARAMS,
+) -> ScheduleCost:
+    """Analytically price one execution configuration of ``prog``.
+
+    The walk is the verifier's symbolic stream-order execution: every
+    descriptor is visited once, per-pid in-flight communication is
+    registered at each ``StartDesc`` and settled at the gating
+    ``WaitDesc``, and compute priced between the two credits against
+    the window (``overlap_eff``); the remainder is exposed wait time.
+    ``engine`` picks the dispatch model (``"host"`` per-op, ``"fused"``
+    one dispatch per iteration, ``"persistent"`` one dispatch total);
+    host-engine runs are synchronous per op, so they earn no overlap
+    credit.  Returns an itemized :class:`ScheduleCost`.
+    """
+    from repro.core.descriptors import KernelDesc, StartDesc, WaitDesc
+    if engine not in _ENGINE_ORDER:
+        raise ValueError(f"engine must be one of {_ENGINE_ORDER}, "
+                         f"got {engine!r}")
+    if mode not in ("stream", "dataflow"):
+        raise ValueError(f"mode must be 'stream' or 'dataflow', got {mode!r}")
+    mesh_shape = dict(prog.mesh.shape)
+    axis_order = list(mesh_shape)
+    buffers = prog.buffers
+    iters = int(n_iters if n_iters is not None
+                else max(1, getattr(prog, "n_iters", 1) or 1))
+    if double_buffer is None:
+        double_buffer = (mode == "dataflow")
+
+    cost = ScheduleCost(engine=engine, mode=mode, coalesce=coalesce,
+                        n_iters=iters)
+    batches_by_index = {b.index: b for b in prog.batches}
+    overlap_eff = 0.0 if engine == "host" else params.overlap_eff
+
+    in_flight: Dict[int, float] = {}
+    credit: Dict[int, float] = {}
+    pending_recv: Dict[int, set] = {}
+    last_pid = None
+    n_switches = 0
+    per_iter_kernel_us = per_iter_coll_us = per_iter_byte_us = 0.0
+    per_iter_stage_us = per_iter_exposed_us = 0.0
+
+    for d in prog.descriptors:
+        pid = d.pid
+        if last_pid is not None and pid != last_pid:
+            n_switches += 1
+        last_pid = pid
+        if isinstance(d, KernelDesc):
+            nbytes = sum(_buf_bytes(buffers[b], mesh_shape)
+                         for b in tuple(d.reads) + tuple(d.writes))
+            k_us = params.kernel_us + nbytes * params.compute_byte_us
+            per_iter_kernel_us += k_us
+            cost.n_kernels += 1
+            for q, fl in in_flight.items():
+                if fl <= 0.0:
+                    continue
+                if q != pid:
+                    credit[q] = credit.get(q, 0.0) + k_us
+                elif mode == "dataflow" and not (
+                        set(d.reads) & pending_recv.get(pid, set())):
+                    # XLA may run a kernel that doesn't consume the
+                    # in-flight deposits concurrently with them
+                    credit[q] = credit.get(q, 0.0) + k_us
+        elif isinstance(d, StartDesc):
+            batch = batches_by_index[d.batch]
+            comm, coll_us, byte_us, stage_us, n_coll, n_elided, moved, \
+                staged = _price_batch(batch, buffers, mesh_shape, axis_order,
+                                      coalesce, params)
+            per_iter_coll_us += coll_us
+            per_iter_byte_us += byte_us
+            per_iter_stage_us += stage_us
+            cost.n_collectives += n_coll
+            cost.n_elided += n_elided
+            cost.bytes_moved += moved
+            cost.staged_bytes += staged
+            in_flight[pid] = in_flight.get(pid, 0.0) + comm
+            credit.setdefault(pid, 0.0)
+            recvs = {c.dst_buf for c in batch.channels} | \
+                    {c.out for c in batch.colls} | set(batch.cross_recv_bufs)
+            pending_recv.setdefault(pid, set()).update(recvs)
+        elif isinstance(d, WaitDesc):
+            fl = in_flight.pop(pid, 0.0)
+            cr = credit.pop(pid, 0.0)
+            per_iter_exposed_us += max(0.0, fl - overlap_eff * cr)
+            pending_recv.pop(pid, None)
+
+    # communication never waited inside the pass is exposed at pass end
+    for pid, fl in in_flight.items():
+        per_iter_exposed_us += max(
+            0.0, fl - overlap_eff * credit.get(pid, 0.0))
+
+    if engine == "host":
+        n_disp = prog.dispatch_count_host() * iters
+    elif engine == "fused":
+        n_disp = iters
+    else:
+        n_disp = 1
+    cost.n_dispatches = n_disp
+    cost.dispatch_us = n_disp * params.dispatch_us
+    cost.kernel_us = per_iter_kernel_us * iters
+    cost.collective_us = per_iter_coll_us * iters
+    cost.bytes_us = per_iter_byte_us * iters
+    cost.staging_us = per_iter_stage_us * iters
+    cost.exposed_us = per_iter_exposed_us * iters
+    cost.switch_us = n_switches * params.switch_us * iters
+
+    if engine == "persistent":
+        from repro.core.engine_persistent import slot_buffers
+        slots = slot_buffers(prog)
+        slot_bytes = sum(_buf_bytes(buffers[s], mesh_shape) for s in slots)
+        if double_buffer:
+            slot_bytes *= 2
+        cost.slot_bytes = slot_bytes
+        cost.slot_us = slot_bytes * params.slot_byte_us * iters
+    return cost
+
+
+def predict_ranking(progs, **kw) -> List[Tuple[str, float]]:
+    """``[(name, total_us)]`` sorted cheapest-first for built programs.
+
+    ``progs`` is an iterable of ``(name, program)`` pairs; ``kw``
+    forwards to :func:`schedule_cost` (same configuration for every
+    program, so the ranking isolates program structure).
+    """
+    out = [(name, schedule_cost(p, **kw).total_us) for name, p in progs]
+    return sorted(out, key=lambda t: t[1])
+
+
+# =========================================================================
+# Model-architecture calibrated costing (dry-run companion)
+# =========================================================================
 
 
 def _pattern_unit(cfg) -> int:
@@ -61,6 +388,8 @@ def _with_depth(cfg, L: int):
 
 
 def _compile_costs(cfg, shape, mesh):
+    from repro.launch.hlo_analysis import analyze_collectives, analyze_dots
+    from repro.launch.steps import build_bundle
     bundle = build_bundle(cfg, shape, mesh)
     lowered = bundle.lower()
     compiled = lowered.compile()
@@ -94,6 +423,12 @@ def _lin(c2, c4, L2, L4, L, key):
 
 def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             save: bool = True) -> dict:
+    import time
+    import traceback
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.dryrun import SKIPS
+    from repro.launch.mesh import make_production_mesh
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -150,6 +485,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
 
 
 def _save(rec, save):
+    import json
     if not save:
         return
     os.makedirs(ARTIFACTS, exist_ok=True)
@@ -160,6 +496,15 @@ def _save(rec, save):
 
 
 def main():
+    # the dry-run meshes need the 512-device grid; set it before any
+    # jax backend initializes (standalone entry point only — importing
+    # this module must NOT touch XLA_FLAGS)
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    import argparse
+    import json
+
+    from repro.configs.base import ARCH_IDS, SHAPES
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -1,0 +1,232 @@
+"""Schedule cost model (repro.launch.costing.schedule_cost).
+
+Fast lane (single device): the predicted orderings the tuner prunes on
+— persistent < fused < host, coalesced < uncoalesced, full-domain <
+linked n4, sequential interleave < round-robin — plus rename
+invariance (costs price structure, never names), component accounting,
+and the error surface.
+
+Slow lane: the same orderings on the real 2×2×2 8-device grid, where
+the ghost-ring identity elisions and the cross-rank collectives both
+actually occur (subprocess, like tests/test_verify.py).
+"""
+
+import pytest
+
+from repro.core import (
+    FacesConfig,
+    build_faces_part_program,
+    build_faces_program,
+    compose,
+    part_names,
+)
+from repro.core.halo import AXES3
+from repro.launch.costing import (
+    DEFAULT_PARAMS,
+    ScheduleCost,
+    predict_ranking,
+    schedule_cost,
+)
+
+N = 5
+
+
+def _mesh111():
+    from repro.parallel import make_mesh
+    return make_mesh((1, 1, 1), AXES3)
+
+
+def _cfg():
+    return FacesConfig(grid=(1, 1, 1), points=(6, 4, 4))
+
+
+def _prog(name=None):
+    return build_faces_program(_cfg(), _mesh111(), name=name)
+
+
+def _linked(n_parts, interleave=None):
+    mesh, cfg = _mesh111(), _cfg()
+    names = part_names(n_parts)
+    progs = [build_faces_part_program(cfg, mesh, k, n_parts,
+                                      names=names).persistent(N)
+             for k in range(n_parts)]
+    return compose(*progs, verify="off", interleave=interleave)
+
+
+# -- predicted orderings (what the tuner prunes on) --------------------------
+
+
+def test_engine_ordering_persistent_beats_fused_beats_host():
+    prog = _prog()
+    host = schedule_cost(prog, engine="host", n_iters=N).total_us
+    fused = schedule_cost(prog, engine="fused", n_iters=N).total_us
+    pers = schedule_cost(prog.persistent(N), engine="persistent").total_us
+    assert pers < fused < host
+
+
+def test_coalesced_cheaper_than_uncoalesced():
+    pprog = _prog().persistent(N)
+    c = schedule_cost(pprog, coalesce=True).total_us
+    u = schedule_cost(pprog, coalesce=False).total_us
+    assert c < u
+
+
+def test_full_domain_cheaper_than_linked_n4():
+    full = schedule_cost(_prog().persistent(N)).total_us
+    linked = schedule_cost(_linked(4)).total_us
+    assert full < linked
+
+
+def test_sequential_interleave_cheaper_than_round_robin():
+    # the interleave knob is priced through the pid-switch count — the
+    # cost model must SEE the policy, or the tuner could not prune on it
+    rr = schedule_cost(_linked(4))
+    seq = schedule_cost(_linked(4, interleave="sequential"))
+    assert seq.switch_us < rr.switch_us
+    assert seq.total_us < rr.total_us
+
+
+def test_predict_ranking_sorted_cheapest_first():
+    pairs = [("full", _prog().persistent(N)), ("linked4", _linked(4))]
+    ranked = predict_ranking(pairs)
+    assert [n for n, _ in ranked] == ["full", "linked4"]
+    assert ranked[0][1] <= ranked[1][1]
+
+
+# -- rename invariance: costs price structure, never names -------------------
+
+
+def _random_names(seed, n):
+    """Deterministic pseudo-random identifiers (property-style without a
+    hypothesis dependency — it is absent from some environments)."""
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    alphabet = "abcdefghij_"
+    out = []
+    while len(out) < n:
+        nm = "".join(alphabet[i] for i in
+                     rng.randint(0, len(alphabet), rng.randint(1, 13)))
+        if nm not in out:
+            out.append(nm)
+    return out
+
+
+@pytest.mark.parametrize("name", ["alpha", "omega"] + _random_names(0, 6))
+def test_rename_invariance_property(name):
+    base = schedule_cost(_prog().persistent(N))
+    renamed = schedule_cost(_prog(name=name).persistent(N))
+    assert renamed.row() == base.row()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_rename_invariance_composed_property(seed):
+    mesh, cfg = _mesh111(), _cfg()
+
+    def build(nm):
+        progs = [build_faces_part_program(cfg, mesh, k, 2, names=nm)
+                 .persistent(N) for k in range(2)]
+        return compose(*progs, verify="off")
+
+    a = schedule_cost(build(tuple(_random_names(seed, 2))))
+    b = schedule_cost(build(part_names(2)))
+    assert a.row() == b.row()
+
+
+# -- accounting and error surface --------------------------------------------
+
+
+def test_total_is_sum_of_components():
+    cost = schedule_cost(_prog().persistent(N))
+    parts = (cost.dispatch_us + cost.collective_us + cost.bytes_us
+             + cost.kernel_us + cost.staging_us + cost.slot_us
+             + cost.exposed_us + cost.switch_us)
+    assert cost.total_us == pytest.approx(parts)
+    row = cost.row()
+    assert row["total_us"] == pytest.approx(cost.total_us)
+
+
+def test_dispatch_models():
+    prog = _prog()
+    host = schedule_cost(prog, engine="host", n_iters=N)
+    fused = schedule_cost(prog, engine="fused", n_iters=N)
+    pers = schedule_cost(prog.persistent(N), engine="persistent")
+    assert host.n_dispatches == prog.dispatch_count_host() * N
+    assert fused.n_dispatches == N
+    assert pers.n_dispatches == 1
+
+
+def test_persistent_prices_slot_pressure():
+    pprog = _prog().persistent(N)
+    db = schedule_cost(pprog, double_buffer=True)
+    single = schedule_cost(pprog, double_buffer=False)
+    assert db.slot_bytes == 2 * single.slot_bytes
+    assert db.slot_us > single.slot_us
+    assert schedule_cost(pprog, engine="fused").slot_bytes == 0
+
+
+def test_params_are_defaulted_and_overridable():
+    import dataclasses
+    pprog = _prog().persistent(N)
+    base = schedule_cost(pprog)
+    pricier = schedule_cost(pprog, params=dataclasses.replace(
+        DEFAULT_PARAMS, dispatch_us=DEFAULT_PARAMS.dispatch_us * 10))
+    assert pricier.dispatch_us == pytest.approx(base.dispatch_us * 10)
+
+
+def test_bad_engine_and_mode_raise():
+    prog = _prog()
+    with pytest.raises(ValueError, match="engine"):
+        schedule_cost(prog, engine="nic")
+    with pytest.raises(ValueError, match="mode"):
+        schedule_cost(prog, mode="chaotic")
+
+
+def test_cost_row_is_json_ready():
+    import json
+    row = schedule_cost(_prog().persistent(N)).row()
+    json.dumps(row)  # no numpy scalars, no dataclasses
+    assert isinstance(schedule_cost(_prog()), ScheduleCost)
+
+
+# -- slow lane: real 8-device grid -------------------------------------------
+
+
+@pytest.mark.slow
+def test_orderings_8dev(subproc):
+    """On the real 2×2×2 grid the ghost-ring channels are full-identity
+    (elided) while the face channels fire real collectives — the same
+    orderings must hold with both effects in play."""
+    code = """
+from repro.core import (FacesConfig, build_faces_part_program,
+                        build_faces_program, compose, part_names)
+from repro.parallel import make_mesh
+from repro.launch.costing import schedule_cost
+
+mesh = make_mesh((2, 2, 2), ("gx", "gy", "gz"))
+cfg = FacesConfig(grid=(2, 2, 2), points=(12, 12, 12))
+N = 10
+prog = build_faces_program(cfg, mesh)
+host = schedule_cost(prog, engine="host", n_iters=N).total_us
+fused = schedule_cost(prog, engine="fused", n_iters=N).total_us
+full = schedule_cost(prog.persistent(N))
+assert full.total_us < fused < host, (full.total_us, fused, host)
+assert full.n_collectives > 0
+
+names = part_names(4)
+progs = [build_faces_part_program(cfg, mesh, k, 4, names=names).persistent(N)
+         for k in range(4)]
+rr = schedule_cost(compose(*progs, verify="off"))
+seq = schedule_cost(compose(*progs, verify="off", interleave="sequential"))
+assert full.total_us < rr.total_us, (full.total_us, rr.total_us)
+assert seq.total_us < rr.total_us, (seq.total_us, rr.total_us)
+assert rr.n_elided > 0          # ghost-ring identity perms never fire
+assert rr.n_collectives > full.n_collectives
+
+c = schedule_cost(prog.persistent(N), coalesce=True).total_us
+u = schedule_cost(prog.persistent(N), coalesce=False).total_us
+assert c < u, (c, u)
+print("OK")
+"""
+    r = subproc(code)
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout

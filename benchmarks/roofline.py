@@ -236,6 +236,14 @@ def print_st_table(rows: List[Dict], file=sys.stdout):
     if pairs:
         print(f"rank agreement (predicted vs measured): "
               f"{concordant}/{pairs} concordant pairs", file=file)
+        if concordant * 2 < pairs:
+            # below coin-flip: the calibrated constants no longer rank
+            # this machine's programs — a warning, never a failure (the
+            # model prices control structure, not cache behaviour)
+            print("WARNING cost-model drift: predicted ordering agrees "
+                  "on fewer than half the measured pairs — re-fit the "
+                  "CostParams constants with scripts/calibrate_cost.py "
+                  "and update repro/launch/costing.py", file=file)
     else:
         print("rank agreement: no measured medians to compare "
               "(need 8 devices + a recorded BENCH_faces.json at "

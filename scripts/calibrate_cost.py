@@ -1,0 +1,166 @@
+"""Fit the cost model's unit constants from recorded bench medians.
+
+The analytic schedule cost model (:mod:`repro.launch.costing`) prices a
+program as a sum of per-component unit costs (host dispatches, fired
+collectives, kernel ops, bytes moved/staged, ...).  Those constants
+were hand-anchored once; this script re-fits them against whatever the
+repo's recorded benchmark files say about THIS machine:
+
+* ``BENCH_faces.json`` medians, via the registry-program → bench-row
+  mapping ``benchmarks/roofline.py`` maintains (each row pairs a
+  priced ST program with a measured median at like-for-like settings);
+* ``BENCH_overlap.json``'s persistent transformer-block chain, rebuilt
+  at the recorded ``_meta`` workload and priced the same way.
+
+Every component is linear in its unit cost, so a measured median is a
+linear equation in per-component *scales*: component µs under the
+default params form the design matrix, and a least-squares solve (3
+grouped scales — dispatch, communication, compute — keeps the system
+overdetermined with a handful of rows) yields the re-fitted constants.
+The fit is printed as a ready-to-paste ``CostParams(...)`` block plus
+the before/after rank agreement; it never edits source files — the
+constants in ``costing.py`` stay the pin until a human moves them
+(``benchmarks/roofline.py`` warns when the ranking has drifted enough
+to make that worthwhile).
+
+Usage::
+
+  PYTHONPATH=src python scripts/calibrate_cost.py
+"""
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.join(HERE, "..")
+
+# grouped scales: few enough unknowns that ~7 medians overdetermine
+# them.  Each group scales the CostParams constants listed with it.
+GROUPS = {
+    "dispatch": (("dispatch_us",), ("dispatch_us",)),
+    "comm": (("collective_us", "bytes_us"), ("collective_us", "byte_us")),
+    "compute": (("kernel_us", "staging_us", "slot_us", "exposed_us",
+                 "switch_us"),
+                ("kernel_us", "compute_byte_us", "stage_byte_us",
+                 "slot_byte_us", "switch_us")),
+}
+
+
+def _rows():
+    """(name, ScheduleCost-with-default-params, measured_ms) triples."""
+    import sys
+    sys.path.insert(0, ROOT)
+    from benchmarks import roofline
+    from repro.launch.costing import schedule_cost
+
+    out = []
+    for r in roofline.st_table():
+        if r.get("measured_ms") is not None:
+            # re-price to get the itemized components (st_table only
+            # keeps the total)
+            from repro.analysis.programs import INNER, iter_programs
+            progs = dict(iter_programs())
+            n_iters = INNER if r["engine"] == "fused" else None
+            cost = schedule_cost(progs[r["st_program"]], engine=r["engine"],
+                                 mode=r["mode"], n_iters=n_iters)
+            out.append((r["st_program"], cost, r["measured_ms"]))
+
+    ovl_path = os.path.join(ROOT, "BENCH_overlap.json")
+    if os.path.exists(ovl_path):
+        with open(ovl_path) as f:
+            stored = json.load(f)
+        meta = stored.get("_meta", {})
+        row = stored.get("overlap/tp_st_persistent")
+        if meta and isinstance(row, dict) and row.get("median_ms"):
+            import jax
+            if jax.device_count() >= meta["devices"]:
+                from repro.core import collectives
+                from repro.parallel import make_mesh
+                mesh = make_mesh((meta["devices"],), ("x",))
+                tp = collectives.build_tp_block(
+                    mesh, "x", meta["m"], meta["k"], meta["f"], chain=True)
+                cost = schedule_cost(tp.program.persistent(meta["layers"]),
+                                     engine="persistent", mode="dataflow")
+                out.append(("overlap_tp_chain", cost, row["median_ms"]))
+    return out
+
+
+def fit(rows):
+    """Least-squares per-group scales; returns ({group: scale}, resid)."""
+    names = list(GROUPS)
+    A = np.array([[sum(getattr(cost, c) for c in GROUPS[g][0])
+                   for g in names] for _, cost, _ in rows])
+    y = np.array([ms * 1e3 for _, _, ms in rows])   # µs
+    sol, *_ = np.linalg.lstsq(A, y, rcond=None)
+    # a negative scale means the rows can't attribute that group's cost
+    # (collinear components) — keep the hand-anchored constant instead
+    scales = {g: (float(s) if s > 0 else 1.0)
+              for g, s in zip(names, sol)}
+    pred = A @ np.array([scales[g] for g in names])
+    return scales, pred
+
+
+def main():
+    from repro.launch.costing import DEFAULT_PARAMS
+
+    rows = _rows()
+    if len(rows) < len(GROUPS):
+        print(f"calibration needs >= {len(GROUPS)} measured rows, have "
+              f"{len(rows)} — record BENCH_faces.json / BENCH_overlap.json "
+              f"on this machine first (PYTHONPATH=src python -m "
+              f"benchmarks.run)")
+        return
+
+    scales, pred = fit(rows)
+    print(f"fitted {len(rows)} rows:")
+    print(f"{'row':28s} {'measured':>10s} {'default':>10s} {'fitted':>10s}")
+    for (name, cost, ms), p in zip(rows, pred):
+        print(f"{name:28s} {ms*1e3:>8.0f}us {cost.total_us:>8.0f}us "
+              f"{p:>8.0f}us")
+    print(f"\nscales: " + ", ".join(f"{g}={s:.3f}"
+                                    for g, s in scales.items()))
+
+    # concordant-pair agreement, default vs fitted
+    def agreement(preds):
+        both = list(zip(preds, [ms for _, _, ms in rows]))
+        conc = pairs = 0
+        for i in range(len(both)):
+            for j in range(i + 1, len(both)):
+                pairs += 1
+                if ((both[i][0] - both[j][0])
+                        * (both[i][1] - both[j][1])) > 0:
+                    conc += 1
+        return conc, pairs
+
+    c0, p0 = agreement([cost.total_us for _, cost, _ in rows])
+    c1, _ = agreement(list(pred))
+    print(f"rank agreement: default {c0}/{p0} -> fitted {c1}/{p0}")
+
+    print("\nsuggested CostParams (paste into repro/launch/costing.py "
+          "if the fitted ranking is better):\n")
+    print("CostParams(")
+    for group, (_, params) in GROUPS.items():
+        for pname in params:
+            print(f"    {pname}={getattr(DEFAULT_PARAMS, pname) * scales[group]:.6g},")
+    print(f"    overlap_eff={DEFAULT_PARAMS.overlap_eff},")
+    print(")")
+
+    out = os.path.join(ROOT, "artifacts", "costing")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "calibration.json"), "w") as f:
+        json.dump({"scales": scales,
+                   "rows": [{"row": n, "measured_ms": ms,
+                             "default_us": cost.total_us,
+                             "fitted_us": float(p)}
+                            for (n, cost, ms), p in zip(rows, pred)],
+                   "agreement": {"default": [c0, p0], "fitted": [c1, p0]}},
+                  f, indent=1)
+    print(f"\nwrote artifacts/costing/calibration.json")
+
+
+if __name__ == "__main__":
+    main()

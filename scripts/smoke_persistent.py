@@ -18,6 +18,13 @@ two-candidate search over the linked n=2 composition on the smoke grid
 — every candidate must lint clean, and the tuned winner must measure no
 slower than the untuned default (which is in the candidate set).
 
+``--overlap`` smokes the ST collective-matmul path
+(`repro.core.collectives`): all-gather-matmul / matmul-reduce-scatter /
+all-to-all expressed as trigger→wait ST programs on a small 2-device
+ring, bit-identical to the decomposed references (and to the stock
+shard_map lowering on the pure-copy paths), plus the chained
+transformer block as ONE persistent dispatch.
+
 ``--serve`` smokes the device-resident serving path
 (`repro.launch.serve`): greedy decode for a fixed-length batch as ONE
 host dispatch, bit-identical to the host-stepped loop; per-sequence EOS
@@ -43,6 +50,8 @@ args.add_argument("--converge", action="store_true",
                   help="also smoke the until-converged while_loop path")
 args.add_argument("--pipeline", action="store_true",
                   help="also smoke the composed 2-queue pipelined dispatch")
+args.add_argument("--overlap", action="store_true",
+                  help="also smoke the ST collective-matmul programs")
 args.add_argument("--serve", action="store_true",
                   help="also smoke the device-resident serving path")
 args.add_argument("--tune", action="store_true",
@@ -190,6 +199,66 @@ if args.tune:
           f"{untuned.stats['med_s']*1e3:.2f}ms; "
           f"{len(tres.candidates)} candidates built+linted clean")
     print("TUNE SMOKE PASS")
+
+if args.overlap:
+    # ST collective matmul: the model-parallel collectives as ST
+    # programs on a small 2-device ring — bit-identical to the
+    # decomposed references, and the chained TP block as ONE dispatch
+    from repro.core import collectives
+    from repro.core.engine_fused import FusedEngine
+    from repro.parallel import make_mesh
+
+    omesh = make_mesh((2,), ("x",))
+    M, K, F, LAYERS = 8, 4, 4, 3
+    orng = np.random.RandomState(0)
+
+    for label, cm, inputs in (
+        ("ag_matmul",
+         collectives.build_all_gather_matmul(omesh, "x", M, K, F),
+         {"x": orng.randn(M, K).astype(np.float32),
+          "w": orng.randn(K, F).astype(np.float32)}),
+        ("matmul_rs",
+         collectives.build_matmul_reduce_scatter(omesh, "x", M, K, F),
+         {"x": orng.randn(M, K).astype(np.float32),
+          "w": orng.randn(K, F).astype(np.float32)}),
+        ("a2a",
+         collectives.build_all_to_all(omesh, "x", M, K),
+         {"x": orng.randn(M, K).astype(np.float32)}),
+    ):
+        oeng = FusedEngine(cm.program, mode="dataflow")
+        got = np.asarray(oeng(oeng.init_buffers(inputs))[cm.output])
+        refa = tuple(inputs[b] for b in cm.inputs)
+        np.testing.assert_array_equal(got, np.asarray(cm.reference(*refa)))
+        if label != "matmul_rs":   # ring rs reorders the float sum
+            np.testing.assert_array_equal(
+                got, np.asarray(cm.reference_stock(*refa)))
+        else:
+            np.testing.assert_allclose(
+                got, np.asarray(cm.reference_stock(*refa)),
+                rtol=1e-5, atol=1e-5)
+        assert oeng.stats.dispatches == 1, oeng.stats.dispatches
+        print(f"overlap[{label}] OK bit-identical, dispatches=1")
+
+    # chained transformer block: persistent(N) == N stock shard_map
+    # applications, in ONE dispatch
+    tp = collectives.build_tp_block(omesh, "x", M, K, F, chain=True)
+    x0 = orng.randn(M, K).astype(np.float32)
+    w1 = orng.randn(K, F).astype(np.float32)
+    w2 = orng.randn(F, K).astype(np.float32)
+    peng = PersistentEngine(tp.program.persistent(LAYERS), donate=True)
+    got = np.asarray(peng(peng.init_buffers(
+        {"x": x0, "w1": w1, "w2": w2}))["out"])
+    ref = stock = x0
+    for _ in range(LAYERS):
+        ref = tp.reference(ref, w1, w2)
+        stock = tp.reference_stock(stock, w1, w2)
+    np.testing.assert_array_equal(got, np.asarray(ref))
+    np.testing.assert_allclose(got, np.asarray(stock),
+                               rtol=1e-4, atol=1e-5)
+    assert peng.stats.dispatches == 1, peng.stats.dispatches
+    print(f"overlap[tp_chain x{LAYERS}] OK bit-identical to decomposed "
+          f"chain, matches stock shard_map chain, dispatches=1")
+    print("OVERLAP SMOKE PASS")
 
 if args.serve:
     # device-resident serving: fixed-length decode as ONE dispatch,

@@ -87,6 +87,26 @@ def iter_programs(device_count: Optional[int] = None) -> Iterator[Tuple[str, obj
         yield "serve_admission", build_admission_schedule(serve_mesh,
                                                           verify="off")
 
+        # ST collective-matmul programs (overlap_bench's ST section):
+        # ring size = the device axis, scaled down with the host grid
+        from repro.core import collectives
+        n = min(device_count, 4)
+        cmesh = make_mesh((n,), ("x",))
+        m, k, f = 8 * n * n, 4 * n, 4 * n
+        yield ("overlap_ag_matmul",
+               collectives.build_all_gather_matmul(
+                   cmesh, "x", m, k, f, verify="off").program)
+        yield ("overlap_matmul_rs",
+               collectives.build_matmul_reduce_scatter(
+                   cmesh, "x", m, k, f, verify="off").program)
+        yield ("overlap_a2a",
+               collectives.build_all_to_all(
+                   cmesh, "x", m, k, verify="off").program)
+        yield ("overlap_tp_chain",
+               collectives.build_tp_block(
+                   cmesh, "x", m, k, f, chain=True,
+                   verify="off").program.persistent(INNER))
+
 
 def lint_all(device_count: Optional[int] = None) -> List[Tuple[str, list]]:
     """Lint every registry program; return ``[(name, diagnostics)]``."""

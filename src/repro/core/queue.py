@@ -11,8 +11,25 @@ MPIX_Enqueue_send       ``queue.enqueue_send(buf, peer, tag)``
 MPIX_Enqueue_recv       ``queue.enqueue_recv(buf, peer, tag)``
 MPIX_Enqueue_start      ``queue.enqueue_start()``
 MPIX_Enqueue_wait       ``queue.enqueue_wait()``
-(kernel launch)         ``queue.enqueue_kernel(fn, reads, writes)``
+(kernel launch)         ``queue.enqueue_kernel(fn, reads, writes)`` /
+                        ``queue.enqueue_compute(fn, reads=, writes=)``
+                        (keyword alias — the per-chunk compute hook of
+                        the collective-matmul verbs)
 (extension)             ``queue.enqueue_collective(op, buf, out, axis)``
+(collective matmul,     ``repro.core.collectives.CollectiveQueue``:
+ §V-F "how the          ``enqueue_all_gather / enqueue_reduce_scatter /
+ schedule is            enqueue_all_to_all`` — ring collectives emitted
+ expressed decides      as ordinary trigger→wait channels with per-chunk
+ the win")              ``enqueue_compute`` kernels inside the windows;
+                        builders ``build_all_gather_matmul`` /
+                        ``build_matmul_reduce_scatter`` /
+                        ``build_all_to_all`` / ``build_tp_block`` (the
+                        "transformer block as ST schedule") return
+                        engine-ready programs bit-identical to the
+                        decomposed ``core.overlap`` lowerings, so model
+                        parallelism inherits coalescing, STLint
+                        (ST013/ST014 ring rules), `schedule_cost`
+                        pricing, `tune()` and 1-dispatch persistence
 (multi-queue)           ``compose(progA, progB, ...)`` /
                         ``prog.concurrent_with(...)`` → :class:`STSchedule`
                         (:mod:`.schedule` — N queues, one device program)
@@ -359,6 +376,16 @@ class STQueue:
             KernelDesc(fn, tuple(reads), tuple(writes), name,
                        site=_call_site()))
         self._built = None
+
+    def enqueue_compute(self, fn: Callable, *, reads: Sequence[str] = (),
+                        writes: Sequence[str] = (),
+                        name: str = "compute") -> None:
+        """Keyword alias of :meth:`enqueue_kernel` — the per-chunk
+        compute hook used by the collective-matmul verbs
+        (:mod:`repro.core.collectives`): a kernel enqueued between a
+        ring step's start and the next step's trigger runs inside that
+        trigger→wait window, which is where overlap comes from."""
+        self.enqueue_kernel(fn, reads, writes, name=name)
 
     def enqueue_send(self, buf: str, peer, tag: int, region=None,
                      remote: Optional[str] = None) -> None:

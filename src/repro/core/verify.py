@@ -123,6 +123,31 @@ ST012  open cross-program descriptors (error, engine time)
     calls it); at build time open descriptors are legal (compose
     resolves them) and are therefore not a build diagnostic.
     *Fix*: ``compose()`` the program with its peer(s) before running.
+ST013  ring rotation hazard (error)
+    *Meaning*: an in-place ring rotation (send and recv on the SAME
+    buffer, replace mode — the descriptor spelling of
+    ``buf = ppermute(buf, delta)`` used by the collective-matmul
+    programs of :mod:`repro.core.collectives`) appears more than once
+    for one buffer inside a single start gate.  Every channel of a gate
+    reads the same pre-trigger value, so the second rotation does not
+    see the first's deposit: the buffer advances one hop, not two, and
+    a ring step is silently lost.
+    *Example*: enqueueing two +1 rotations of the accumulator between
+    one start/wait pair to "skip ahead" two ranks.
+    *Fix*: one rotation per gate — give each ring step its own
+    start/wait (or rotate by ``delta=2`` in one channel).
+ST014  chunk-accumulator clobber (error)
+    *Meaning*: a buffer is a ring accumulator — it receives add-mode
+    deposits, or kernels that read AND write it (the
+    ``acc = acc + piece(...)`` pattern of the ST reduce-scatter) — and
+    a kernel REWRITES it without reading it strictly between the first
+    and last accumulate events: the partial sum accumulated so far is
+    discarded mid-ring.  Seed kernels before the first accumulate are
+    the legitimate initialization and are exempt.
+    *Example*: re-running the reduce-scatter seed kernel between two
+    ring steps.
+    *Fix*: seed once before the ring; mid-ring kernels must read the
+    accumulator they update.
 """
 
 from __future__ import annotations
@@ -159,6 +184,10 @@ RULES: Dict[str, Tuple[str, str]] = {
     "ST010": ("warning", "persistent accumulator drift"),
     "ST011": ("warning", "dead channels not pruned"),
     "ST012": ("error", "open cross-program descriptors at engine time"),
+    "ST013": ("error", "ring rotation hazard: one buffer rotated twice "
+                       "in a single start gate"),
+    "ST014": ("error", "chunk-accumulator clobber: accumulator rewritten "
+                       "without read mid-ring"),
 }
 
 
@@ -417,6 +446,22 @@ def verify_program(prog) -> List[Diagnostic]:
             started.add(d.batch)
             if batch is None:
                 continue
+            # ST013: every channel of a gate reads the same pre-trigger
+            # value, so a second in-place rotation of one buffer in the
+            # same gate overwrites (not chains) the first — a ring hop
+            # is silently lost
+            rotations: Dict[str, int] = defaultdict(int)
+            for ch in batch.channels:
+                if ch.src_buf == ch.dst_buf and ch.mode == "replace":
+                    rotations[ch.src_buf] += 1
+            for rbuf, cnt in rotations.items():
+                if cnt > 1:
+                    diag("ST013", pid,
+                         f"batch {d.batch} rotates {rbuf!r} in place {cnt} "
+                         f"times under one start gate: rotations read the "
+                         f"pre-trigger value, so only one hop survives — "
+                         f"give each ring step its own start/wait",
+                         index=i, site=d.site)
             # reads (packs) happen before this batch's own deposits land
             for ch in batch.channels:
                 check_read(ch.src_buf, pid, i,
@@ -521,6 +566,39 @@ def verify_program(prog) -> List[Diagnostic]:
                          f"kernel rewriting it: the accumulator grows "
                          f"across persistent iterations",
                          site=getattr(ch, "recv_site", None))
+
+    # -- chunk-accumulator clobber (ST014) -----------------------------------
+    # accumulate events per buffer, in descriptor order: add-mode
+    # deposits (the start gate's position) and read+write kernels (the
+    # ring accumulate pattern).  A kernel that REWRITES the buffer
+    # without reading it strictly inside that span discards the partial
+    # sum; the seed kernel before the first accumulate is exempt.
+    acc_pos: Dict[Tuple[int, str], List[int]] = defaultdict(list)
+    for i, d in enumerate(prog.descriptors):
+        if isinstance(d, StartDesc):
+            batch = batches.get(d.batch)
+            if batch is None:
+                continue
+            for ch in batch.channels:
+                if ch.mode == "add":
+                    dpid = d.pid if ch.dst_pid is None else ch.dst_pid
+                    acc_pos[(dpid, ch.dst_buf)].append(i)
+        elif isinstance(d, KernelDesc):
+            for w in d.writes:
+                if w in d.reads:
+                    acc_pos[(d.pid, w)].append(i)
+    for (apid, buf), positions in acc_pos.items():
+        if len(positions) < 2:
+            continue
+        lo, hi = positions[0], positions[-1]
+        for i, d in enumerate(prog.descriptors):
+            if (lo < i < hi and isinstance(d, KernelDesc) and d.pid == apid
+                    and buf in d.writes and buf not in d.reads):
+                diag("ST014", apid,
+                     f"kernel {d.name!r} rewrites accumulator {buf!r} "
+                     f"without reading it, between its accumulate steps "
+                     f"(descriptor positions {lo}..{hi}): the partial sum "
+                     f"is discarded mid-ring", index=i, site=d.site)
 
     # -- structural: dead channels (ST011) and plan consistency (ST008) -----
     for b in prog.batches:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -524,3 +524,46 @@ def build_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                                   **kwargs)
     return build_serve_step(cfg, shape, mesh, serve_window=serve_window,
                             **kwargs)
+
+
+# -- collective-matmul wiring (ROADMAP: collective-matmul unification) ------
+
+
+def tp_block_schedule(mesh: Mesh, axis: str, m: int, k: int, f: int, *,
+                      companions: Sequence[Any] = (),
+                      dtype=jnp.float32, bidirectional: bool = False,
+                      interleave: Any = "round_robin",
+                      verify: str = "error",
+                      name: Optional[str] = None):
+    """A tensor-parallel block's grad/activation collectives composed
+    INTO the same schedule as other queues (halo exchange, pipeline
+    stages): the "transformer block as ST schedule".
+
+    Builds the Megatron-MLP ST program
+    (:func:`repro.core.collectives.build_tp_block` — all-gather-matmul
+    → relu → matmul-reduce-scatter, every ring step a trigger→wait
+    channel) and fuses it with ``companions`` (any built STPrograms,
+    e.g. :func:`repro.core.halo.build_faces_program`) via
+    :func:`repro.core.schedule.compose` — so the TP matmul chunks are
+    scheduled into the companions' trigger→wait windows and the whole
+    step runs as ONE dispatch (the SUMMA-pipelined pattern: compute on
+    chunk s overlaps the transfer of chunk s+1 *and* the companions'
+    halo traffic).
+
+    Returns ``(schedule_or_program, tp)`` where ``tp`` is the
+    :class:`~repro.core.collectives.CollectiveMatmul` carrying the
+    TP program's buffer names and bit-identity references.  With no
+    companions the bare TP program is returned (engine-ready either
+    way).  Under composition the TP buffers are namespaced
+    ``"{tp.program.name}/{buffer}"``.
+    """
+    from repro.core.collectives import build_tp_block
+    from repro.core.schedule import compose
+
+    tp = build_tp_block(mesh, axis, m, k, f, dtype,
+                        bidirectional=bidirectional, verify="warn")
+    if not companions:
+        return tp.program, tp
+    sched = compose(tp.program, *companions, interleave=interleave,
+                    verify=verify, name=name or "tp_block_sched")
+    return sched, tp

@@ -5,7 +5,11 @@ dispatch gather/scatter across the expert dimension is exactly the
 paper's sparse-peer communication pattern (§DESIGN 4) — under pjit the
 partitioner lowers it to all-to-all traffic on the expert axis, and the
 ST benchmarks exercise the same pattern explicitly through
-``overlap.all_to_all_ppermute``.
+``overlap.all_to_all_ppermute``.  :func:`build_moe_dispatch_program`
+expresses that exchange as a first-class ST program (one start gate of
+staged trigger→wait channels, via
+:mod:`repro.core.collectives`) so the dispatch composes/tunes/persists
+with the rest of a step's schedule.
 
 Routing flavours:
 * ``softmax`` (grok-1): softmax over router logits, top-k, renormalized;
@@ -250,6 +254,45 @@ def apply_moe_ep(p, x, cfg: ModelConfig) -> Optional[Tuple[jax.Array, Dict]]:
     aux = {"lb_loss": lb, "router_probs_mean": frac_probs,
            "dropped_frac": dropped}
     return y, aux
+
+
+def build_moe_dispatch_program(mesh, axis: str, n_experts: int,
+                               capacity: int, d_model: int,
+                               dtype=jnp.float32, *, verify: str = "warn",
+                               name: str = "st_moe_dispatch"):
+    """MoE all-to-all dispatch as a composable ST program.
+
+    The expert-parallel dispatch exchange — every rank's sorted
+    capacity buffer ``[E, C, D]`` (flattened to ``E*C`` rows, experts
+    contiguous) sent so the block for expert ``e`` lands on the rank
+    owning it — is exactly a tiled all-to-all over the expert rows.
+    This builder expresses it through
+    :func:`repro.core.collectives.build_all_to_all`: one start gate of
+    n-1 staged trigger→wait channels, so the dispatch coalesces,
+    STLints, prices under ``schedule_cost``, composes with other
+    queues (expert FFN kernels ride inside the gate's trigger→wait
+    window), and runs persistent.  Bit-identical to
+    ``overlap.all_to_all_ppermute`` and ``lax.all_to_all`` (pure
+    copies).
+
+    The combine leg is the same exchange in reverse — the tiled a2a is
+    an involution, so running the returned program a second time (or
+    ``.persistent(2)``) routes expert outputs back to their source
+    ranks.
+
+    Returns a :class:`repro.core.collectives.CollectiveMatmul` whose
+    ``inputs`` / ``output`` buffers are the flattened dispatch rows.
+    """
+    from repro.core import collectives
+
+    n = dict(mesh.shape)[axis]
+    if n_experts % n:
+        raise ValueError(
+            f"n_experts ({n_experts}) must divide by the {axis!r} axis "
+            f"size ({n}) for expert-parallel dispatch")
+    rows = n * n_experts * capacity  # global: every rank holds E*C rows
+    return collectives.build_all_to_all(mesh, axis, rows, d_model, dtype,
+                                        verify=verify, name=name)
 
 
 def apply_moe(p, x, cfg: ModelConfig, *, capacity: Optional[int] = None

@@ -294,6 +294,65 @@ class TestRules:
         with pytest.raises(ValueError, match=r"\[ST012\]"):
             HostEngine(pa)
 
+    @staticmethod
+    def _ring_accumulator(steps=3):
+        """A clean ring-reduce accumulator (the collectives.py
+        reduce-scatter shape, hand-built on the 1-device mesh): seed,
+        then per step one in-place rotation gate + one accumulate
+        kernel reading AND writing ``acc``."""
+        q = STQueue(_meshx(), name="ring")
+        q.buffer("y", (4,), np.float32, pspec=("x",))
+        q.buffer("acc", (4,), np.float32, pspec=("x",))
+        q.enqueue_kernel(lambda y: y * 1.0, ["y"], ["acc"], name="seed")
+        for s in range(steps):
+            q.enqueue_send("acc", OffsetPeer("x", 0, periodic=True), tag=s)
+            q.enqueue_recv("acc", OffsetPeer("x", 0, periodic=True), tag=s)
+            q.enqueue_start()
+            q.enqueue_wait()
+            q.enqueue_kernel(lambda a, y: a + y, ["acc", "y"], ["acc"],
+                             name=f"acc{s}")
+        return q.build(verify="off")
+
+    def test_st013_double_rotation_in_one_gate(self):
+        prog = self._ring_accumulator()
+        assert "ST013" not in _codes(prog)  # one rotation per gate: clean
+        bi, b = next((i, b) for i, b in enumerate(prog.batches)
+                     if b.channels)
+        # splice the rotation channel in twice under the same start gate
+        batches = list(prog.batches)
+        batches[bi] = dataclasses.replace(
+            b, channels=list(b.channels) + [b.channels[0]], plan=None)
+        bad = dataclasses.replace(prog, batches=tuple(batches))
+        diags = [d for d in verify_program(bad) if d.rule == "ST013"]
+        assert diags and diags[0].severity == "error"
+        assert "only one hop survives" in diags[0].message
+
+    def test_st014_accumulator_clobbered_mid_ring(self):
+        prog = self._ring_accumulator(steps=3)
+        assert "ST014" not in _codes(prog)  # seed-then-accumulate: clean
+        descs = list(prog.descriptors)
+        # drop the middle accumulate's read of `acc`: it becomes a
+        # rewrite between the first and last accumulate events
+        ki = next(i for i, d in enumerate(descs)
+                  if isinstance(d, KernelDesc) and d.name == "acc1")
+        descs[ki] = dataclasses.replace(descs[ki], reads=("y",))
+        diags = [d for d in verify_program(_with_descs(prog, descs))
+                 if d.rule == "ST014"]
+        assert diags and diags[0].severity == "error"
+        assert "discarded mid-ring" in diags[0].message
+
+    def test_st013_st014_collective_builders_lint_clean(self):
+        # the collective-matmul builders must produce lint-clean
+        # programs even on the degenerate 1-device mesh (the registry
+        # sweep covers the 8-device builds)
+        from repro.core import collectives as C
+        mesh = _meshx()
+        for cm in (C.build_all_gather_matmul(mesh, "x", 8, 4, 2),
+                   C.build_matmul_reduce_scatter(mesh, "x", 8, 4, 2),
+                   C.build_all_to_all(mesh, "x", 8, 2),
+                   C.build_tp_block(mesh, "x", 8, 4, 4)):
+            assert not verify_program(cm.program)
+
 
 # -- policy wiring ------------------------------------------------------------
 

@@ -12,6 +12,15 @@ This AST lint enforces it:
 * no direct ``jax.experimental.shard_map`` imports outside compat.py —
   the legacy spelling is compat.py's fallback, not an API.
 
+A second rule guards the STProve effect substrate: shipped program
+*builders* (:data:`EFFECT_DECLARING`) must pass explicit ``reads=`` and
+``writes=`` to every ``enqueue_compute`` call.  The no-argument form is
+a legal convenience for exploratory user code — the queue substitutes a
+conservative reads-everything effect set and flags it ST019 — but in
+shipped builders implicit effects over-serialize the happens-before
+graph and weaken the race rules (ST015–ST018), so the AST lint bans it
+at the source.
+
 Scans ``src/``, ``tests/``, ``benchmarks/``, and ``scripts/``.  Prints
 ``file:line: message`` per violation and exits non-zero if any are
 found (the CI lint job runs this next to ``python -m repro.analysis``).
@@ -32,6 +41,14 @@ SHIMMED = {"shard_map", "axis_size", "AxisType", "CompilerParams",
            "TPUCompilerParams", "check_vma", "check_rep"}
 LEGACY_MODULE = "jax.experimental.shard_map"
 
+#: shipped builders where every enqueue_compute must declare its effect
+#: set explicitly (reads= AND writes=) — see module docstring
+EFFECT_DECLARING = {
+    os.path.join("src", "repro", "core", "collectives.py"),
+    os.path.join("src", "repro", "core", "halo.py"),
+    os.path.join("src", "repro", "launch", "serve.py"),
+}
+
 
 def _feature_test_name(node: ast.Call):
     """The probed attribute name, if this call is getattr/hasattr with a
@@ -48,6 +65,18 @@ def _feature_test_name(node: ast.Call):
     return None
 
 
+def _implicit_enqueue_compute(node: ast.Call) -> bool:
+    """True when this is an ``<q>.enqueue_compute(...)`` call missing an
+    explicit ``reads=`` or ``writes=`` keyword."""
+    fn = node.func
+    if not (isinstance(fn, ast.Attribute) and fn.attr == "enqueue_compute"):
+        return False
+    if any(isinstance(kw.arg, type(None)) for kw in node.keywords):
+        return False  # **kwargs splat: can't see through it statically
+    kws = {kw.arg for kw in node.keywords}
+    return not {"reads", "writes"} <= kws
+
+
 def lint_file(path: str, rel: str):
     with open(path, "r", encoding="utf-8") as f:
         src = f.read()
@@ -56,6 +85,7 @@ def lint_file(path: str, rel: str):
     except SyntaxError as e:  # pragma: no cover - repo must parse
         return [(rel, e.lineno or 0, f"syntax error: {e.msg}")]
 
+    declare_effects = rel in EFFECT_DECLARING
     out = []
     for node in ast.walk(tree):
         if isinstance(node, ast.Call):
@@ -64,6 +94,11 @@ def lint_file(path: str, rel: str):
                 out.append((rel, node.lineno,
                             f"feature-test of shimmed name {name!r} — "
                             f"import the shim from repro/compat.py instead"))
+            if declare_effects and _implicit_enqueue_compute(node):
+                out.append((rel, node.lineno,
+                            "enqueue_compute without explicit reads=/"
+                            "writes= — shipped builders must declare "
+                            "effect sets (implicit fallback is ST019)"))
         elif isinstance(node, ast.ImportFrom):
             if node.module and node.module.startswith(LEGACY_MODULE):
                 out.append((rel, node.lineno,

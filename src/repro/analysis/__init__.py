@@ -12,12 +12,15 @@ Usage::
 
     PYTHONPATH=src python -m repro.analysis            # lint everything
     PYTHONPATH=src python -m repro.analysis faces      # name filter
+    PYTHONPATH=src python -m repro.analysis --strict   # CI mode
 
-Exit status is non-zero if ANY diagnostic is emitted: shipped programs
-must lint clean (acceptance bar), so even a warning-severity finding is
-a regression here.
+Exit status is non-zero on error-severity diagnostics; ``--strict``
+(what CI runs) also fails warning-severity findings — shipped programs
+must lint completely clean (acceptance bar) — and prints the STProve
+certificate table (:func:`.programs.certificates`): per-program effect
+digest plus the happens-before race-free verdict.
 """
 
-from .programs import iter_programs, lint_all
+from .programs import certificates, iter_programs, lint_all
 
-__all__ = ["iter_programs", "lint_all"]
+__all__ = ["certificates", "iter_programs", "lint_all"]

@@ -2,8 +2,13 @@
 
 Prints one diagnostics table per program (rule id, severity, pid,
 descriptor index, message, enqueue site) and a final summary line.
-Exit status 0 only if every program lints clean — the CI lint job runs
-exactly this.
+Exit status is non-zero if any **error**-severity diagnostic is
+emitted; ``--strict`` additionally fails on warning-severity findings
+(shipped programs must lint completely clean — the CI lint job runs
+``--strict``) and prints a per-program certificate table: the effect
+digest from :func:`repro.core.effects.program_certificate` plus the
+happens-before race-free verdict (ST015–ST018 — race freedom under ANY
+interleave policy, not just the emitted stream order).
 """
 
 import os
@@ -22,11 +27,14 @@ def main(argv=None) -> int:
         description="STLint every ST program the benchmarks build")
     ap.add_argument("filter", nargs="?", default="",
                     help="only lint programs whose name contains this")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warning-severity diagnostics too, and "
+                         "print the per-program effect-certificate table")
     args = ap.parse_args(argv)
 
     from repro.core.verify import format_diagnostics
 
-    from .programs import lint_all
+    from .programs import certificates, lint_all
 
     results = [(name, diags) for name, diags in lint_all()
                if args.filter in name]
@@ -39,14 +47,38 @@ def main(argv=None) -> int:
         total += len(diags)
         print(f"== {name}")
         print(format_diagnostics(diags))
-    dirty = [name for name, diags in results if diags]
+
+    rc = 0
+    failing = ("error",) if not args.strict else ("error", "warning")
+    dirty = [name for name, diags in results
+             if any(d.severity in failing for d in diags)]
     if dirty:
         print(f"\nSTLint: {total} diagnostic(s) across "
-              f"{len(dirty)}/{len(results)} program(s): {', '.join(dirty)}",
+              f"{len(dirty)}/{len(results)} failing program(s): "
+              f"{', '.join(dirty)}",
               file=sys.stderr)
-        return 1
-    print(f"\nSTLint: {len(results)} program(s) clean")
-    return 0
+        rc = 1
+    else:
+        print(f"\nSTLint: {len(results)} program(s) clean"
+              + ("" if total == 0 else f" ({total} non-failing finding(s))"))
+
+    if args.strict:
+        print("\n== effect certificates (STProve)")
+        racy = []
+        for name, cert in certificates():
+            if args.filter not in name:
+                continue
+            verdict = ("race-free" if cert.race_free
+                       else f"RACY ({cert.n_races} race(s))")
+            print(f"  {name:28s} digest={cert.digest}  "
+                  f"effects={cert.n_effects:4d}  {verdict}")
+            if not cert.race_free:
+                racy.append(name)
+        if racy:
+            print(f"\nSTProve: race(s) found in: {', '.join(racy)}",
+                  file=sys.stderr)
+            rc = 1
+    return rc
 
 
 if __name__ == "__main__":

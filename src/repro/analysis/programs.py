@@ -114,3 +114,17 @@ def lint_all(device_count: Optional[int] = None) -> List[Tuple[str, list]]:
 
     return [(name, verify_program(prog))
             for name, prog in iter_programs(device_count)]
+
+
+def certificates(device_count: Optional[int] = None) -> List[Tuple[str, object]]:
+    """Issue a :class:`~repro.core.effects.ProgramCertificate` for every
+    registry program: ``[(name, certificate)]`` with the program's effect
+    digest and its race-free verdict under the happens-before rules
+    (ST015–ST018) — i.e. race-free under ANY interleave policy, not just
+    the emitted stream order.  ``python -m repro.analysis --strict``
+    prints this table.
+    """
+    from repro.core.effects import program_certificate
+
+    return [(name, program_certificate(prog))
+            for name, prog in iter_programs(device_count)]

@@ -15,7 +15,11 @@ The paper's contribution as a composable JAX module:
   banks, round-robin batch interleaving, per-program predicates)
 * :mod:`.halo`         — the Faces 26-neighbor pattern as an ST program
 * :mod:`.overlap`      — decomposed overlap-friendly collectives
-* :mod:`.verify`       — STLint: static verifier + runtime sanitizer
+* :mod:`.verify`       — STLint: static verifier + runtime sanitizer,
+  including the happens-before race rules (ST015–ST018)
+* :mod:`.effects`      — STProve: declared read/write effect sets per
+  descriptor, per-buffer effect traces, and transform-equivalence
+  certificates
 """
 
 from .counters import (
@@ -38,6 +42,17 @@ from .descriptors import (
     SendDesc,
     StartDesc,
     WaitDesc,
+)
+from .effects import (
+    Effect,
+    EquivalenceCertificate,
+    ProgramCertificate,
+    batch_effects,
+    certify_equivalence,
+    effect_trace,
+    program_certificate,
+    program_digest,
+    stamp_staging,
 )
 from .engine_fused import FusedEngine
 from .engine_host import HostEngine, HostStats
@@ -81,7 +96,9 @@ from .verify import (
     SanitizeError,
     STLintWarning,
     VerifyError,
+    build_happens_before,
     format_diagnostics,
+    hb_race_diagnostics,
     run_verify,
     verify_program,
 )
@@ -107,4 +124,8 @@ __all__ = [
     "DIRECTIONS", "FACES", "EDGES", "CORNERS",
     "Diagnostic", "STLintWarning", "VerifyError", "SanitizeError",
     "verify_program", "run_verify", "format_diagnostics",
+    "build_happens_before", "hb_race_diagnostics",
+    "Effect", "EquivalenceCertificate", "ProgramCertificate",
+    "batch_effects", "certify_equivalence", "effect_trace",
+    "program_certificate", "program_digest", "stamp_staging",
 ]

@@ -221,6 +221,12 @@ class KernelDesc:
     pid: int = 0
     # Enqueue-site provenance ("file:line"; see module docstring).
     site: Optional[str] = None
+    # True when the effect set was NOT declared by the caller and the
+    # queue substituted the conservative reads-everything fallback
+    # (enqueue_compute with no reads=/writes=).  Surfaced as the ST019
+    # warning: implicit effects over-serialize the happens-before graph
+    # and weaken every race rule built on it.
+    implicit_effects: bool = False
 
 
 @dataclasses.dataclass

@@ -1,0 +1,365 @@
+"""STProve effect sets — the memory-effect model under every descriptor.
+
+STLint (:mod:`repro.core.verify`) walks the *emitted* stream order; the
+transform layers above it (coalescing, interleave policies, unroll,
+double-buffer rotation, the tuner's whole knob space) re-order and
+re-lower that stream.  To reason about a program under **every** legal
+interleaving — and to prove that a transformed program still touches
+memory the same way — each descriptor needs a declared read/write
+effect set, not just a position in one particular stream.
+
+This module is that effect substrate:
+
+* :func:`batch_effects` derives one :class:`Effect` per memory access a
+  trigger batch performs — pack reads (send sources, collective
+  inputs), deposit writes (recv destinations, collective outputs,
+  add-mode accumulations) and coalesce staging-buffer traffic — and
+  ``queue.build()`` / ``schedule.compose()`` record the result on
+  :class:`~repro.core.matching.Batch.effects` (compose re-records after
+  cross-program channels join their trigger batches);
+* :func:`stamp_staging` gives every fused transfer of a
+  :class:`~repro.core.matching.CoalescePlan` a *declared* staging-buffer
+  identity (unique per batch/transfer by construction, so reuse across
+  overlapping trigger→wait windows — rule ST017 — is a statement about
+  declared identities, never an inference);
+* :func:`effect_trace` flattens a whole program into per-buffer effect
+  sequences in per-pid program order.  The trace is **invariant under
+  every transform that preserves semantics** — interleave policy,
+  coalescing on/off, trigger mode, double-buffer/unroll — because it
+  never looks at the merged stream: per-pid order is FIFO by the queue
+  contract, and cross-program deposits are recorded at the *receiver's
+  gating wait*, the only point the receiver may observe them;
+* :func:`certify_equivalence` compares two programs' traces (plus
+  buffer specs) and checks the candidate race-free under the
+  happens-before analysis (:func:`repro.core.verify.build_happens_before`),
+  returning an :class:`EquivalenceCertificate`.  ``launch/tune.py``
+  consumes it — certified candidates skip the per-candidate allclose
+  check, uncertified ones are disqualified before timing — and
+  ``repro.analysis`` prints one :class:`ProgramCertificate` per
+  registry program in CI.
+
+What the trace can and cannot see: kernels are identified by their
+``name`` plus read/write signature (two kernels with one name and one
+signature but different bodies are indistinguishable statically — the
+builders name kernels uniquely per role, which is the contract), and
+regions are compared as canonical ``(start, stop, step)`` triples.
+Structural changes (``n_parts``, different kernels, added channels)
+always change the trace; execution-configuration knobs never do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .descriptors import KernelDesc, StartDesc, WaitDesc
+from .matching import _peer_key
+
+
+@dataclasses.dataclass(frozen=True)
+class Effect:
+    """One declared memory access of a descriptor or batch.
+
+    ``kind`` is ``"read" | "write" | "accum"`` (add-mode deposits
+    accumulate: they read AND write, and commute with each other but
+    with nothing else).  ``source`` names the access class —
+    ``"kernel"`` (enqueued compute), ``"pack"`` (send source /
+    collective input read at trigger), ``"deposit"`` (recv destination /
+    collective output) or ``"stage"`` (coalesce staging buffer).
+    ``pid`` is the pid of the stream that *triggers* the access;
+    ``region`` is a canonical region key (:func:`region_key`).
+    """
+
+    buf: str
+    kind: str
+    source: str
+    pid: int
+    region: Optional[Tuple] = None
+    site: Optional[str] = None
+
+
+def region_key(region) -> Optional[Tuple]:
+    """Canonical, hashable key for a send/recv region.
+
+    ``None`` (whole buffer) stays ``None``; slices become
+    ``(start, stop, step)`` triples; anything fancier is keyed by repr
+    (compared conservatively as opaque-but-equal-by-spelling).
+    """
+    if region is None:
+        return None
+    try:
+        return tuple(
+            (s.start, s.stop, s.step) if isinstance(s, slice)
+            else ("ix", repr(s))
+            for s in tuple(region))
+    except TypeError:
+        return ("opaque", repr(region))
+
+
+def stamp_staging(plan, batch_index: int):
+    """Fill in declared staging identities on a plan's fused transfers.
+
+    Build-time stamps are unique per (batch, transfer) — engines
+    allocate exactly one staging temporary per fused transfer, so no
+    two trigger→wait windows ever share one.  A transfer that already
+    declares a ``staging`` name keeps it (hand-built plans and the
+    ST017 mutation tests declare collisions on purpose).
+    """
+    if plan is None:
+        return None
+    transfers = tuple(
+        t if t.staging is not None
+        else dataclasses.replace(t, staging=f"~stage/b{batch_index}.t{ti}")
+        for ti, t in enumerate(plan.transfers))
+    return dataclasses.replace(plan, transfers=transfers)
+
+
+def batch_effects(batch) -> Tuple[Effect, ...]:
+    """Derive one batch's declared effect set, in execution order.
+
+    Order mirrors the engines' per-batch lowering: every pack read
+    (send sources, collective inputs) happens at the trigger, staging
+    buffers are written (packed) then read (deposited from), and
+    deposits land last — recv destinations and collective outputs.
+    """
+    pid = batch.pid
+    effs: List[Effect] = []
+    for ch in batch.channels:
+        effs.append(Effect(buf=ch.src_buf, kind="read", source="pack",
+                           pid=pid, region=region_key(ch.send_region),
+                           site=ch.send_site))
+    for coll in batch.colls:
+        effs.append(Effect(buf=coll.buf, kind="read", source="pack",
+                           pid=pid, site=coll.site))
+    if batch.plan is not None:
+        for t in batch.plan.transfers:
+            if t.staging is not None:
+                effs.append(Effect(buf=t.staging, kind="write",
+                                   source="stage", pid=pid))
+                effs.append(Effect(buf=t.staging, kind="read",
+                                   source="stage", pid=pid))
+    for ch in batch.channels:
+        effs.append(Effect(
+            buf=ch.dst_buf, kind="accum" if ch.mode == "add" else "write",
+            source="deposit", pid=pid, region=region_key(ch.recv_region),
+            site=ch.recv_site))
+    for coll in batch.colls:
+        effs.append(Effect(buf=coll.out, kind="write", source="deposit",
+                           pid=pid, site=coll.site))
+    return tuple(effs)
+
+
+def cross_gate_map(prog) -> Dict[Tuple[int, str], List[Tuple[int, int]]]:
+    """``(src_batch, dst_buf) -> [(dst_pid, dst_batch), ...]`` for every
+    resolved cross-program channel (from ``STSchedule.links``; falls
+    back to scanning ``cross_recv_bufs`` for hand-built schedules)."""
+    gates: Dict[Tuple[int, str], List[Tuple[int, int]]] = defaultdict(list)
+    links = getattr(prog, "links", ()) or ()
+    if links:
+        subs = getattr(prog, "subs", ())
+        pid_of = {s.name: s.pid for s in subs}
+        for l in links:
+            gates[(l.src_batch, l.dst_buf)].append(
+                (pid_of.get(l.dst, 0), l.dst_batch))
+        return gates
+    for b in prog.batches:
+        for buf in b.cross_recv_bufs:
+            for src in prog.batches:
+                for ch in src.channels:
+                    if ch.dst_pid == b.pid and ch.dst_buf == buf:
+                        gates[(src.index, buf)].append((b.pid, b.index))
+    return gates
+
+
+def effect_trace(prog) -> Dict[str, Tuple[Tuple, ...]]:
+    """Per-buffer effect sequences, in per-pid program order.
+
+    The trace is the program's memory-effect *semantics* stripped of
+    scheduling: each pid's records appear in that pid's own FIFO order
+    (invariant under every interleave policy — policies merge streams,
+    they never reorder within one), and a cross-program deposit is
+    recorded at the **receiver's gating wait** in the receiver's walk —
+    the earliest point the receiving stream may observe it, identical
+    under every legal schedule of the same links.
+    """
+    batches = {b.index: b for b in prog.batches}
+    gates = cross_gate_map(prog)
+    cursor: Dict[Tuple[int, str], int] = defaultdict(int)
+
+    # Resolve every cross-program deposit to its gate once, walking the
+    # full stream so the per-key FIFO cursor advances exactly as the
+    # engines' (and verify's) walk does.  Which *gate* a deposit
+    # resolves to depends only on per-batch channel order — interleave
+    # policies cannot change it (each batch has one StartDesc).
+    pending_cross: Dict[Tuple[int, int], List[Tuple[str, Tuple]]] = \
+        defaultdict(list)
+    for d in prog.descriptors:
+        if not isinstance(d, StartDesc):
+            continue
+        batch = batches.get(d.batch)
+        if batch is None:
+            continue
+        for ch in batch.channels:
+            dpid = d.pid if ch.dst_pid is None else ch.dst_pid
+            if dpid == d.pid:
+                continue
+            key = (d.batch, ch.dst_buf)
+            opts = gates.get(key, [])
+            cur = cursor[key]
+            gate = (opts[min(cur, len(opts) - 1)] if opts
+                    else (dpid, d.batch))
+            cursor[key] = cur + 1
+            pending_cross[gate].append((ch.dst_buf, (
+                "deposit", ch.tag, ch.mode, region_key(ch.recv_region),
+                "from_pid", d.pid)))
+
+    trace: Dict[str, List[Tuple]] = defaultdict(list)
+    pids = sorted({d.pid for d in prog.descriptors}) or [0]
+    for pid in pids:
+        flushed: set = set()
+        for d in prog.descriptors:
+            if d.pid != pid:
+                continue
+            if isinstance(d, KernelDesc):
+                for r in d.reads:
+                    trace[r].append(("kread", d.name, d.reads, d.writes))
+                for w in d.writes:
+                    trace[w].append(("kwrite", d.name, d.reads, d.writes))
+            elif isinstance(d, StartDesc):
+                batch = batches.get(d.batch)
+                if batch is None:
+                    continue
+                for ch in batch.channels:
+                    trace[ch.src_buf].append((
+                        "send", ch.tag, _peer_key(ch.peer),
+                        region_key(ch.send_region)))
+                for coll in batch.colls:
+                    trace[coll.buf].append(("collread", coll.op,
+                                            repr(coll.axis)))
+                for ch in batch.channels:
+                    dpid = pid if ch.dst_pid is None else ch.dst_pid
+                    if dpid != pid:
+                        continue  # cross deposit: receiver's wait records it
+                    trace[ch.dst_buf].append((
+                        "deposit", ch.tag, ch.mode,
+                        region_key(ch.recv_region)))
+                for coll in batch.colls:
+                    trace[coll.out].append(("collout", coll.op,
+                                            repr(coll.axis)))
+            elif isinstance(d, WaitDesc):
+                for gate, recs in pending_cross.items():
+                    gpid, gbatch = gate
+                    if gpid != pid or gbatch > d.batch or gate in flushed:
+                        continue
+                    flushed.add(gate)
+                    for buf, rec in recs:
+                        trace[buf].append(rec)
+    return {buf: tuple(recs) for buf, recs in trace.items()}
+
+
+def _buffer_specs(prog) -> Dict[str, Tuple]:
+    return {
+        name: (tuple(spec.shape), np.dtype(spec.dtype).str,
+               tuple(repr(p) for p in spec.pspec))
+        for name, spec in prog.buffers.items()
+    }
+
+
+def program_digest(prog) -> str:
+    """Stable hash of a program's effect trace + buffer specs."""
+    h = hashlib.sha256()
+    for name, spec in sorted(_buffer_specs(prog).items()):
+        h.update(repr((name, spec)).encode())
+    for buf, recs in sorted(effect_trace(prog).items()):
+        h.update(repr((buf, recs)).encode())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class EquivalenceCertificate:
+    """Proof record that a transformed program preserves effect
+    semantics — per-buffer effect traces and buffer specs match the
+    baseline's, and the candidate is race-free under happens-before
+    (no ST015–ST018 findings).  ``reason`` names the first mismatch
+    when ``equivalent`` is False."""
+
+    equivalent: bool
+    baseline: str
+    candidate: str
+    baseline_digest: str
+    candidate_digest: str
+    race_free: bool
+    n_buffers: int
+    reason: Optional[str] = None
+
+
+def certify_equivalence(baseline, candidate) -> EquivalenceCertificate:
+    """Certify ``candidate``'s memory-effect semantics match ``baseline``.
+
+    Three checks, all static: (1) identical buffer specs, (2) identical
+    per-buffer effect traces (:func:`effect_trace`), (3) the candidate
+    is race-free under the happens-before analysis.  A certificate with
+    ``equivalent=True`` licenses skipping per-candidate bit-identity
+    measurement: same buffers, same per-stream access sequences, and no
+    interleaving can expose an unordered conflict.
+    """
+    from .verify import hb_race_diagnostics  # lazy: verify imports us
+
+    base_digest = program_digest(baseline)
+    cand_digest = program_digest(candidate)
+    races = hb_race_diagnostics(candidate)
+    race_free = not races
+
+    def cert(equivalent: bool, reason: Optional[str] = None):
+        return EquivalenceCertificate(
+            equivalent=equivalent, baseline=baseline.name,
+            candidate=candidate.name, baseline_digest=base_digest,
+            candidate_digest=cand_digest, race_free=race_free,
+            n_buffers=len(candidate.buffers), reason=reason)
+
+    sb, sc = _buffer_specs(baseline), _buffer_specs(candidate)
+    if sb != sc:
+        changed = sorted(set(sb) ^ set(sc)) or sorted(
+            n for n in sb if sb[n] != sc.get(n))
+        return cert(False, f"buffer specs differ: {changed[:4]}")
+    tb, tc = effect_trace(baseline), effect_trace(candidate)
+    if set(tb) != set(tc):
+        return cert(False, "touched-buffer sets differ: "
+                           f"{sorted(set(tb) ^ set(tc))[:4]}")
+    for buf in sorted(tb):
+        if tb[buf] != tc[buf]:
+            return cert(False, f"effect trace diverges on {buf!r} "
+                               f"({len(tb[buf])} vs {len(tc[buf])} records)")
+    if not race_free:
+        return cert(False, "candidate is not race-free under "
+                           "happens-before: "
+                    + "; ".join(d.rule for d in races[:4]))
+    return cert(True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramCertificate:
+    """Per-program summary for ``python -m repro.analysis --strict``:
+    the effect-trace digest and the happens-before race verdict."""
+
+    name: str
+    digest: str
+    race_free: bool
+    n_races: int
+    n_effects: int
+
+
+def program_certificate(prog) -> ProgramCertificate:
+    """Digest + race-free-under-all-interleavings verdict for ``prog``."""
+    from .verify import hb_race_diagnostics  # lazy: verify imports us
+
+    races = hb_race_diagnostics(prog)
+    trace = effect_trace(prog)
+    return ProgramCertificate(
+        name=prog.name, digest=program_digest(prog),
+        race_free=not races, n_races=len(races),
+        n_effects=sum(len(r) for r in trace.values()))

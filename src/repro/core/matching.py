@@ -256,6 +256,12 @@ class Batch:
     # into this batch's slot(s) by another program's trigger, which this
     # batch's wait must gate (filled by compose()).
     cross_recv_bufs: Tuple[str, ...] = ()
+    # Declared effect set (repro.core.effects.batch_effects): every
+    # memory access this batch performs — pack reads, staging traffic,
+    # deposits — recorded at build time and re-recorded by compose()
+    # once cross-program channels join the batch.  The happens-before
+    # analysis and the equivalence certifier consume it.
+    effects: Tuple[Any, ...] = ()
 
 
 # --------------------------------------------------------------------------
@@ -288,6 +294,12 @@ class CoalescedChannel:
     dtype: Any
     stage: int  # execution stage (by-axis round) within the batch
     segments: Tuple[Segment, ...]
+    # Declared staging-buffer identity (repro.core.effects.stamp_staging
+    # fills it in at build/compose time, unique per batch/transfer).
+    # Two transfers sharing one identity across happens-before-unordered
+    # trigger→wait windows is rule ST017 — reuse is a declared fact
+    # here, never inferred from (axis, perm, dtype) coincidence.
+    staging: Optional[str] = None
 
     @property
     def size(self) -> int:

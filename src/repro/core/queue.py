@@ -56,6 +56,19 @@ MPIX_Enqueue_wait       ``queue.enqueue_wait()``
                         debugger the NIC's offloaded DWQ does not have;
                         ``engine(..., sanitize=True)`` adds the runtime
                         NaN-canary sanitizer
+(effect/race            ``repro.core.effects`` + the happens-before
+ analysis face)         analysis of ``repro.core.verify``: every batch
+                        records its declared effect set
+                        (``Batch.effects`` — pack reads, staging
+                        traffic, deposits; kernels carry ``reads=``/
+                        ``writes=``), rules ST015–ST018 prove a program
+                        race-free under EVERY interleave policy (not
+                        just the emitted order), and
+                        ``effects.certify_equivalence`` proves a
+                        transformed candidate's per-buffer effect trace
+                        equal to its baseline's — consumed by ``tune()``
+                        (certified candidates skip allclose) and
+                        ``python -m repro.analysis --strict``
 (§V-C hand-tuned        ``repro.launch.tune.tune``: a generic knob search
  shaders)               (trigger mode, coalescing, interleave policy,
                         double-buffer/unroll) over a built program —
@@ -127,6 +140,7 @@ from .descriptors import (
     StartDesc,
     WaitDesc,
 )
+from .effects import batch_effects, stamp_staging
 from .matching import (
     Batch,
     MatchError,
@@ -134,6 +148,35 @@ from .matching import (
     match_batch,
     validate_program_order,
 )
+
+
+def _adapt_arity(fn: Callable, n_reads: int) -> Callable:
+    """Adapt a kernel to the conservative implicit-reads fallback.
+
+    The engines call ``fn(*reads)`` positionally; when the queue widens
+    an undeclared read set to every buffer, a kernel written for fewer
+    arguments would crash at trace time — so pass it only the prefix it
+    was written for.  Kernels taking ``*args`` are left untouched (they
+    accept the widened call by construction).
+    """
+    import inspect
+
+    try:
+        params = inspect.signature(fn).parameters.values()
+    except (TypeError, ValueError):
+        return fn
+    if any(p.kind == inspect.Parameter.VAR_POSITIONAL for p in params):
+        return fn
+    arity = sum(p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                           inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                for p in params)
+    if arity >= n_reads:
+        return fn
+
+    def adapted(*vals):
+        return fn(*vals[:arity])
+
+    return adapted
 
 
 def _call_site() -> Optional[str]:
@@ -377,15 +420,35 @@ class STQueue:
                        site=_call_site()))
         self._built = None
 
-    def enqueue_compute(self, fn: Callable, *, reads: Sequence[str] = (),
+    def enqueue_compute(self, fn: Callable, *,
+                        reads: Optional[Sequence[str]] = None,
                         writes: Sequence[str] = (),
                         name: str = "compute") -> None:
         """Keyword alias of :meth:`enqueue_kernel` — the per-chunk
         compute hook used by the collective-matmul verbs
         (:mod:`repro.core.collectives`): a kernel enqueued between a
         ring step's start and the next step's trigger runs inside that
-        trigger→wait window, which is where overlap comes from."""
+        trigger→wait window, which is where overlap comes from.
+
+        Omitting ``reads=`` does NOT make the kernel effect-free: the
+        queue substitutes the conservative fallback — the kernel is
+        assumed to read **every** buffer declared so far (its declared
+        writes stay as given) — and the descriptor is flagged
+        ``implicit_effects``, which STLint reports as the ST019 warning.
+        Implicit effects over-serialize the happens-before analysis
+        (every pending deposit looks like a race with this kernel), so
+        declare ``reads=``/``writes=`` explicitly; the in-repo builders
+        are lint-enforced to (``scripts/lint_repo.py``).
+        """
+        implicit = reads is None
+        if implicit:
+            all_bufs = tuple(self._buffers)
+            fn = _adapt_arity(fn, len(all_bufs))
+            reads = all_bufs
         self.enqueue_kernel(fn, reads, writes, name=name)
+        if implicit:
+            self._descs[-1] = dataclasses.replace(
+                self._descs[-1], implicit_effects=True)
 
     def enqueue_send(self, buf: str, peer, tag: int, region=None,
                      remote: Optional[str] = None) -> None:
@@ -539,20 +602,21 @@ class STQueue:
                             f"a channel to the own queue is a plain (local) "
                             f"send/recv pair, not a cross-program link")
                 channels = match_batch(local_sends, local_recvs)
-                plan = (coalesce_batch(channels, self._buffers, mesh_shape)
-                        if coalesce else None)
-                batches.append(
-                    Batch(
-                        index=d.batch,
-                        kernels_before=list(kernels_since_start),
-                        channels=channels,
-                        colls=list(pending_colls),
-                        plan=plan,
-                        coalesce=coalesce,
-                        open_sends=open_sends,
-                        open_recvs=open_recvs,
-                    )
+                plan = stamp_staging(
+                    coalesce_batch(channels, self._buffers, mesh_shape)
+                    if coalesce else None, d.batch)
+                batch = Batch(
+                    index=d.batch,
+                    kernels_before=list(kernels_since_start),
+                    channels=channels,
+                    colls=list(pending_colls),
+                    plan=plan,
+                    coalesce=coalesce,
+                    open_sends=open_sends,
+                    open_recvs=open_recvs,
                 )
+                batch.effects = batch_effects(batch)
+                batches.append(batch)
                 pending_sends, pending_recvs, pending_colls = [], [], []
                 kernels_since_start = []
             elif isinstance(d, WaitDesc):

@@ -74,6 +74,7 @@ from .descriptors import (
     StartDesc,
     WaitDesc,
 )
+from .effects import batch_effects, stamp_staging
 from .matching import Batch, MatchError, coalesce_batch, match_cross_program
 from .queue import STProgram
 
@@ -486,11 +487,15 @@ def compose(*programs: STProgram, name: Optional[str] = None,
                 f"links= declares {sorted(declared)} but the programs' "
                 f"remote descriptors realize {sorted(realized)}")
 
-    # coalescing plans, re-derived now that cross channels joined their
-    # trigger batches (per-batch, so two programs' *triggers* never merge)
+    # coalescing plans — and declared effect sets — re-derived now that
+    # cross channels joined their trigger batches (per-batch, so two
+    # programs' *triggers* never merge); staging identities re-stamped
+    # per (batch, transfer) so no two trigger→wait windows share one
     for b in batches:
         if b.coalesce:
-            b.plan = coalesce_batch(b.channels, buffers, mesh_shape)
+            b.plan = stamp_staging(
+                coalesce_batch(b.channels, buffers, mesh_shape), b.index)
+        b.effects = batch_effects(b)
 
     # -- link-aware interleaving -------------------------------------------
     # a link's trigger (sender's start segment) must be emitted before

@@ -148,6 +148,70 @@ ST014  chunk-accumulator clobber (error)
     ring steps.
     *Fix*: seed once before the ring; mid-ring kernels must read the
     accumulator they update.
+
+Happens-before rules (STProve)
+------------------------------
+Rules ST015-ST018 come from a different engine than the walk above:
+:func:`build_happens_before` builds the partial order every legal
+interleave policy must respect — per-pid program order, trigger →
+deposit-window → gating-wait edges resolved through the counter banks,
+cross-program link edges — and flags conflicting declared effects
+(:mod:`repro.core.effects`) that the order leaves UNORDERED.  They
+catch races the emitted-order walk cannot: a program whose emitted
+stream happens to serialize two accesses still fails here if some
+other legal merge of the same per-pid streams would not.
+
+ST015  kernel/deposit race across pids (error)
+    *Meaning*: a kernel's declared effect on a buffer has no
+    happens-before ordering against another program's deposit into the
+    same (overlapping) region — under some legal interleaving the
+    kernel runs while the NIC owns the slot, even if the emitted order
+    is safe.  Same-pid windows stay with ST006/ST007 (stream order
+    within one pid is invariant under every policy).
+    *Example*: reordering a composed schedule so a consumer kernel
+    sits between the producer's start and the consumer's gating wait.
+    *Fix*: order the kernel after the wait that observes the deposit.
+ST016  WAR on a rotated slot (error)
+    *Meaning*: in a persistent program, a read of a double-buffered
+    message slot has NO write ordered before it in the pass while a
+    cross-stream write races it: under ``(cur, alt)`` slot rotation
+    the read may execute first and observe the stale alternate copy
+    (iteration i-2's data), under any policy that merges the streams
+    differently.
+    *Example*: moving a kernel that reads a cross-deposited slot ahead
+    of the slot's gating wait in a persistent composition.
+    *Fix*: gate every slot read behind the wait observing the pass's
+    depositing trigger.
+ST017  staging-buffer reuse across overlapping windows (error)
+    *Meaning*: two fused transfers *declare* the same staging-buffer
+    identity (``CoalescedChannel.staging``) while their trigger→wait
+    windows are unordered under happens-before — one pack may
+    overwrite payloads the other transfer has not deposited yet.
+    Build-time stamps (:func:`repro.core.effects.stamp_staging`) are
+    unique per (batch, transfer), so this fires only on hand-built or
+    mutated plans.
+    *Example*: editing two batches' plans to share one staging name
+    with no wait ordering the batches.
+    *Fix*: let ``stamp_staging`` assign identities, or wait the first
+    batch's completions before triggering the second.
+ST018  donated-buffer read after rotation (error)
+    *Meaning*: in a persistent program, a read of a rotated/donated
+    slot is ordered after one of the pass's writes but races ANOTHER
+    write of the same slot — after slot rotation/donation the read may
+    observe either generation's copy depending on the interleaving.
+    *Example*: two cross-program deposits into one slot with the
+    consumer kernel gated on only the first.
+    *Fix*: give each deposit generation its own slot, or gate the read
+    on the wait observing the last write.
+ST019  implicit kernel effects (warning)
+    *Meaning*: ``enqueue_compute`` was called without ``reads=`` — the
+    conservative reads-everything fallback is in force, which
+    over-serializes the happens-before graph (every pending deposit
+    looks like a race with this kernel) and hides the kernel's true
+    footprint from the equivalence certifier.
+    *Example*: ``queue.enqueue_compute(fn)`` with no effect keywords.
+    *Fix*: declare ``reads=``/``writes=`` explicitly (in-repo builders
+    are lint-enforced by ``scripts/lint_repo.py``).
 """
 
 from __future__ import annotations
@@ -168,6 +232,7 @@ from .descriptors import (
     WaitDesc,
     perm_for,
 )
+from .effects import cross_gate_map
 
 RULES: Dict[str, Tuple[str, str]] = {
     # rule id -> (default severity, one-line title)
@@ -188,6 +253,16 @@ RULES: Dict[str, Tuple[str, str]] = {
                        "in a single start gate"),
     "ST014": ("error", "chunk-accumulator clobber: accumulator rewritten "
                        "without read mid-ring"),
+    "ST015": ("error", "kernel/deposit race across pids: unordered under "
+                       "happens-before"),
+    "ST016": ("error", "WAR on a rotated slot: read may precede the "
+                       "pass's first write under some interleaving"),
+    "ST017": ("error", "staging-buffer reuse across overlapping "
+                       "trigger-to-wait windows"),
+    "ST018": ("error", "donated-buffer read after rotation races a "
+                       "same-pass write"),
+    "ST019": ("warning", "kernel enqueued with implicit (undeclared) "
+                         "effects"),
 }
 
 
@@ -307,26 +382,11 @@ def _regions_overlap(a, b) -> bool:
     return True
 
 
-def _cross_gate_map(prog) -> Dict[Tuple[int, str], List[Tuple[int, int]]]:
-    """``(src_batch, dst_buf) -> [(dst_pid, dst_batch), ...]`` for every
-    resolved cross-program channel (from ``STSchedule.links``; falls
-    back to scanning ``cross_recv_bufs`` for hand-built schedules)."""
-    gates: Dict[Tuple[int, str], List[Tuple[int, int]]] = defaultdict(list)
-    links = getattr(prog, "links", ()) or ()
-    if links:
-        subs = getattr(prog, "subs", ())
-        pid_of = {s.name: s.pid for s in subs}
-        for l in links:
-            gates[(l.src_batch, l.dst_buf)].append(
-                (pid_of.get(l.dst, 0), l.dst_batch))
-        return gates
-    for b in prog.batches:
-        for buf in b.cross_recv_bufs:
-            for src in prog.batches:
-                for ch in src.channels:
-                    if ch.dst_pid == b.pid and ch.dst_buf == buf:
-                        gates[(src.index, buf)].append((b.pid, b.index))
-    return gates
+# the cross-gate resolution is shared with the effect-trace layer
+# (repro.core.effects) so the happens-before graph, the symbolic walk,
+# the runtime sanitizer and the equivalence certifier all agree on
+# which wait observes which cross-program deposit
+_cross_gate_map = cross_gate_map
 
 
 def _buffer_owner(prog) -> Dict[str, int]:
@@ -424,6 +484,14 @@ def verify_program(prog) -> List[Diagnostic]:
                          f"composition)", index=i, site=d.site)
 
         elif isinstance(d, KernelDesc):
+            if getattr(d, "implicit_effects", False):
+                diag("ST019", pid,
+                     f"kernel {d.name!r} was enqueued without declared "
+                     f"effects (enqueue_compute with no reads=): the "
+                     f"conservative reads-everything fallback is in force, "
+                     f"which over-serializes the happens-before analysis — "
+                     f"declare reads=/writes= explicitly",
+                     index=i, site=d.site)
             for r in d.reads:
                 check_read(r, pid, i, d.site, f"kernel {d.name!r}")
             for w in list(d.reads) + list(d.writes):
@@ -615,6 +683,9 @@ def verify_program(prog) -> List[Diagnostic]:
         if b.plan is not None:
             _check_plan(b, diag)
 
+    # -- happens-before race rules (ST015-ST018) ----------------------------
+    _hb_rules(prog, diag)
+
     return diags
 
 
@@ -650,6 +721,318 @@ def _check_plan(b, diag) -> None:
                      f"batch {b.index} channel {ci} hop {hop}: route "
                      f"({ti}, {off}) does not match its segment "
                      f"(payload would alias a neighbor's slab)")
+
+
+# --------------------------------------------------------------------------
+# STProve: the happens-before analysis (rules ST015-ST018)
+# --------------------------------------------------------------------------
+#
+# The symbolic walk above checks the *emitted* stream order — one
+# particular merge of the per-program streams.  The happens-before
+# graph checks every merge at once: its only ordering edges are the
+# ones NO legal interleave policy may break —
+#
+#   * per-pid program order (each queue is FIFO by contract);
+#   * trigger -> deposit -> completion -> gating-wait: a deposit is
+#     modeled as a *window* node reachable from its StartDesc and
+#     reaching the wait that observes its completion (resolved through
+#     the same cross-gate map as the walk/sanitizer), nothing else —
+#     between those two points the NIC owns the slot;
+#   * cross-program links, which are exactly the window edges whose
+#     gating wait lives on another pid's stream.
+#
+# Pack reads (send sources, collective inputs) attach to the StartDesc
+# node itself: the engines pack at trigger, in stream order, under
+# every policy.  Two conflicting effects with no happens-before path
+# either way can race under SOME legal interleaving even if the
+# emitted order happens to serialize them — that is what ST015-ST018
+# report, and what "race-free under all interleavings" certifies.
+
+
+@dataclasses.dataclass(frozen=True)
+class _HBEffect:
+    """One effect placed on a happens-before node."""
+
+    node: int
+    buf: str
+    kind: str       # read | write | accum
+    source: str     # kernel | pack | deposit
+    pid: int        # triggering stream's pid
+    region: Optional[Tuple]   # raw region (slices), None = whole buffer
+    index: Optional[int]      # descriptor index for diagnostics
+    site: Optional[str]
+
+
+@dataclasses.dataclass(frozen=True)
+class _HBTransfer:
+    """One fused transfer's staging window (for ST017)."""
+
+    staging: Optional[str]
+    pid: int
+    batch: int
+    ti: int
+    start_node: int
+    gate_nodes: Tuple[Optional[int], ...]  # per member channel
+    site: Optional[str]
+
+
+class HappensBefore:
+    """Reachability over the happens-before graph of one program.
+
+    ``effects`` carries every declared memory access placed on a node;
+    ``transfers`` the staging windows.  ``reaches(a, b)`` is transitive
+    reachability (reflexive); ``ordered`` is reachability either way —
+    two conflicting effects that are NOT ordered race under some legal
+    interleaving.
+    """
+
+    def __init__(self, n_nodes: int, succ: Dict[int, List[int]],
+                 effects: List[_HBEffect],
+                 transfers: List[_HBTransfer]):
+        self.n_nodes = n_nodes
+        self.effects = effects
+        self.transfers = transfers
+        # bitmask fixpoint: reach[i] has bit j set iff i ->* j.  The
+        # graph is a DAG whose edges mostly point forward in node id
+        # (chains, start->window) with only window->gate-wait pointing
+        # back, so a reverse-id sweep converges in a couple of rounds;
+        # masks only grow, so the loop terminates regardless.
+        reach = [1 << i for i in range(n_nodes)]
+        changed = True
+        while changed:
+            changed = False
+            for i in reversed(range(n_nodes)):
+                r = reach[i]
+                for j in succ.get(i, ()):
+                    r |= reach[j]
+                if r != reach[i]:
+                    reach[i] = r
+                    changed = True
+        self._reach = reach
+
+    def reaches(self, a: int, b: int) -> bool:
+        return bool((self._reach[a] >> b) & 1)
+
+    def ordered(self, a: int, b: int) -> bool:
+        return self.reaches(a, b) or self.reaches(b, a)
+
+
+def build_happens_before(prog) -> HappensBefore:
+    """Build the happens-before graph + effect placement for ``prog``.
+
+    Nodes are descriptor indices plus one virtual *window* node per
+    (start, deposit) — see the section comment above for the edge set.
+    """
+    descs = prog.descriptors
+    batches = {b.index: b for b in prog.batches}
+    succ: Dict[int, List[int]] = defaultdict(list)
+
+    last_by_pid: Dict[int, int] = {}
+    for i, d in enumerate(descs):
+        prev = last_by_pid.get(d.pid)
+        if prev is not None:
+            succ[prev].append(i)
+        last_by_pid[d.pid] = i
+
+    waits_by_pid: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+    for i, d in enumerate(descs):
+        if isinstance(d, WaitDesc):
+            waits_by_pid[d.pid].append((d.batch, i))
+
+    def gate_wait_node(gpid: int, gbatch: int) -> Optional[int]:
+        # completion counters are cumulative: the FIRST wait of the
+        # gating pid at-or-after the gating batch observes the deposit
+        for wb, wi in waits_by_pid.get(gpid, ()):
+            if wb >= gbatch:
+                return wi
+        return None
+
+    gates = cross_gate_map(prog)
+    cursor: Dict[Tuple[int, str], int] = defaultdict(int)
+    next_node = len(descs)
+    effects: List[_HBEffect] = []
+    transfers: List[_HBTransfer] = []
+
+    for i, d in enumerate(descs):
+        if isinstance(d, KernelDesc):
+            for r in d.reads:
+                effects.append(_HBEffect(i, r, "read", "kernel", d.pid,
+                                         None, i, d.site))
+            for w in d.writes:
+                effects.append(_HBEffect(i, w, "write", "kernel", d.pid,
+                                         None, i, d.site))
+        elif isinstance(d, StartDesc):
+            batch = batches.get(d.batch)
+            if batch is None:
+                continue
+            # pack reads execute AT the trigger, in stream order
+            for ch in batch.channels:
+                effects.append(_HBEffect(
+                    i, ch.src_buf, "read", "pack", d.pid, ch.send_region,
+                    i, getattr(ch, "send_site", None) or d.site))
+            for coll in batch.colls:
+                effects.append(_HBEffect(i, coll.buf, "read", "pack",
+                                         d.pid, None, i, coll.site))
+            # deposits live on window nodes: start -> window -> gating wait
+            ch_gate: Dict[int, Optional[int]] = {}
+            for ci, ch in enumerate(batch.channels):
+                dpid = d.pid if ch.dst_pid is None else ch.dst_pid
+                if dpid == d.pid:
+                    gate = (d.pid, d.batch)
+                else:
+                    key = (d.batch, ch.dst_buf)
+                    opts = gates.get(key, [])
+                    cur = cursor[key]
+                    gate = (opts[min(cur, len(opts) - 1)] if opts
+                            else (dpid, d.batch))
+                    cursor[key] = cur + 1
+                w = next_node
+                next_node += 1
+                succ[i].append(w)
+                gw = gate_wait_node(*gate)
+                if gw is not None:
+                    succ[w].append(gw)
+                ch_gate[ci] = gw
+                effects.append(_HBEffect(
+                    w, ch.dst_buf,
+                    "accum" if ch.mode == "add" else "write", "deposit",
+                    d.pid, ch.recv_region, i,
+                    getattr(ch, "recv_site", None) or d.site))
+            for coll in batch.colls:
+                w = next_node
+                next_node += 1
+                succ[i].append(w)
+                gw = gate_wait_node(d.pid, d.batch)
+                if gw is not None:
+                    succ[w].append(gw)
+                effects.append(_HBEffect(w, coll.out, "write", "deposit",
+                                         d.pid, None, i, coll.site))
+            if batch.plan is not None:
+                for ti, t in enumerate(batch.plan.transfers):
+                    transfers.append(_HBTransfer(
+                        staging=getattr(t, "staging", None), pid=d.pid,
+                        batch=d.batch, ti=ti, start_node=i,
+                        gate_nodes=tuple(ch_gate.get(s.channel)
+                                         for s in t.segments),
+                        site=d.site))
+
+    return HappensBefore(next_node, succ, effects, transfers)
+
+
+def _hb_rules(prog, diag) -> None:
+    """Run the happens-before race rules, reporting through ``diag``."""
+    hb = build_happens_before(prog)
+    descs = prog.descriptors
+    by_buf: Dict[str, List[_HBEffect]] = defaultdict(list)
+    for e in hb.effects:
+        by_buf[e.buf].append(e)
+
+    def kname(e: _HBEffect) -> str:
+        d = descs[e.index] if e.index is not None else None
+        return getattr(d, "name", "?") if isinstance(d, KernelDesc) else "?"
+
+    # -- ST015: kernel effect vs another pid's deposit, unordered ----------
+    for buf, effs in by_buf.items():
+        kernels = [e for e in effs if e.source == "kernel"]
+        deposits = [e for e in effs if e.source == "deposit"]
+        for ek in kernels:
+            for ed in deposits:
+                if ed.pid == ek.pid:
+                    continue  # same-pid windows: ST006/ST007's walk owns it
+                if not _regions_overlap(ek.region, ed.region):
+                    continue
+                if hb.ordered(ek.node, ed.node):
+                    continue
+                diag("ST015", ek.pid,
+                     f"kernel {kname(ek)!r} {ek.kind}s {buf!r} with no "
+                     f"happens-before ordering against pid {ed.pid}'s "
+                     f"deposit into it: some legal interleaving runs the "
+                     f"kernel while the NIC owns the slot",
+                     index=ek.index, site=ek.site)
+
+    # -- ST016 / ST018: rotated-slot hazards (persistent programs) ---------
+    if getattr(prog, "is_persistent", False):
+        from .engine_persistent import slot_buffers  # lazy: imports us back
+        slots = set(slot_buffers(prog))
+        for buf in slots:
+            effs = by_buf.get(buf, [])
+            writes = [e for e in effs if e.kind in ("write", "accum")]
+            for r in (e for e in effs if e.kind == "read"):
+                racing = [w for w in writes
+                          if w.pid != r.pid and w.node != r.node
+                          and _regions_overlap(w.region, r.region)
+                          and not hb.ordered(w.node, r.node)]
+                if not racing:
+                    continue
+                preceded = any(w.node != r.node
+                               and hb.reaches(w.node, r.node)
+                               for w in writes)
+                w0 = racing[0]
+                if not preceded:
+                    diag("ST016", r.pid,
+                         f"read of rotated slot {buf!r} has no write "
+                         f"ordered before it this pass and races pid "
+                         f"{w0.pid}'s write: under (cur, alt) slot "
+                         f"rotation the read may observe the stale "
+                         f"alternate copy", index=r.index, site=r.site)
+                else:
+                    diag("ST018", r.pid,
+                         f"read of rotated slot {buf!r} is ordered after "
+                         f"one write but races pid {w0.pid}'s later "
+                         f"write of the same pass: after rotation/"
+                         f"donation the read may observe either "
+                         f"generation's copy", index=r.index, site=r.site)
+
+    # -- ST017: declared staging identity shared across unordered windows --
+    groups: Dict[str, List[_HBTransfer]] = defaultdict(list)
+    for t in hb.transfers:
+        if t.staging is not None:
+            groups[t.staging].append(t)
+
+    def retired_before(a: _HBTransfer, b: _HBTransfer) -> bool:
+        """Every deposit of ``a`` is gated by a wait that happens-before
+        ``b``'s trigger (so ``a``'s staging window is provably closed)."""
+        return bool(a.gate_nodes) and all(
+            g is not None and hb.reaches(g, b.start_node)
+            for g in a.gate_nodes)
+
+    for staging, ts in groups.items():
+        for x in range(len(ts)):
+            for y in range(x + 1, len(ts)):
+                t1, t2 = ts[x], ts[y]
+                if retired_before(t1, t2) or retired_before(t2, t1):
+                    continue
+                diag("ST017", t2.pid,
+                     f"staging buffer {staging!r} is shared by transfers "
+                     f"of batches {t1.batch} and {t2.batch} whose "
+                     f"trigger-to-wait windows are unordered under "
+                     f"happens-before: one pack may overwrite payloads "
+                     f"the other transfer has not deposited yet",
+                     index=t2.start_node, site=t2.site)
+
+
+def hb_race_diagnostics(prog) -> List[Diagnostic]:
+    """Just the happens-before race rules (ST015-ST018) over ``prog``.
+
+    The equivalence certifier (:func:`repro.core.effects
+    .certify_equivalence`) and the ``repro.analysis`` certificate
+    summary call this directly — a certified-equivalent candidate must
+    also be race-free under every interleaving.
+    """
+    diags: List[Diagnostic] = []
+    seen = set()
+
+    def diag(rule, pid, message, index=None, site=None, severity=None):
+        key = (rule, pid, index, message)
+        if key in seen:
+            return
+        seen.add(key)
+        diags.append(Diagnostic(
+            rule=rule, severity=severity or RULES[rule][0], pid=pid,
+            message=message, index=index, site=site, program=prog.name))
+
+    _hb_rules(prog, diag)
+    return diags
 
 
 # --------------------------------------------------------------------------

@@ -42,9 +42,14 @@ lists.  The cartesian product is enumerated (these spaces are tiny:
 tens, not thousands); each candidate is **built** (builder exceptions
 — e.g. :class:`~repro.core.schedule.ScheduleError` for an impossible
 interleaving — mark it invalid rather than aborting the search),
-**verified** (error-severity STLint diagnostics disqualify), and
-**priced** analytically.  Only the ``measure_top`` cheapest predictions
-are compiled and timed (median of ``repeats``); the fastest measured
+**verified** (error-severity STLint diagnostics disqualify),
+optionally **certified** (``certify=True`` proves each candidate's
+per-buffer effect trace identical to the ``base``-knob program's via
+:func:`repro.core.effects.certify_equivalence` — non-equivalent
+candidates are disqualified before they are ever priced or timed, and
+equivalent ones skip the numeric ``check`` callback), and **priced**
+analytically.  Only the ``measure_top`` cheapest predictions are
+compiled and timed (median of ``repeats``); the fastest measured
 median wins.  Ties in prediction are broken by knob order, so the
 search is deterministic.
 
@@ -115,6 +120,10 @@ class Candidate:
     engine: Any = None
     fresh: Any = None
     error: Optional[str] = None
+    # EquivalenceCertificate vs the base-knob program (tune(certify=True));
+    # an equivalent certificate lets the candidate skip the numeric
+    # ``check`` callback, a non-equivalent one disqualifies it pre-timing.
+    certificate: Any = None
 
     @property
     def measured_ms(self) -> Optional[float]:
@@ -200,6 +209,8 @@ def tune(
     repeats: int = 3,
     measure_top: int = 3,
     engine_kind: Optional[str] = None,
+    certify: bool = False,
+    check: Optional[Callable[[Candidate], None]] = None,
     verbose: bool = False,
 ) -> TuneResult:
     """Search ``space`` over ``build``; return the measured winner.
@@ -209,10 +220,28 @@ def tune(
     engine's class otherwise); ``inner``/``repeats`` shape the timing
     loop exactly like the bench harness.  Raises ``ValueError`` when
     no candidate survives build+lint.
+
+    ``certify=True`` builds the ``base``-knob program once and issues an
+    :class:`~repro.core.effects.EquivalenceCertificate` for every
+    candidate against it: a candidate whose per-buffer effect trace does
+    not match the baseline's is disqualified *before* pricing or timing
+    (``error="uncertified: ..."``), so a knob that silently changes
+    numerics can never publish a number.  ``check`` is a numeric
+    validator called with each measured candidate (raise to reject it);
+    candidates holding an equivalent certificate **skip** it — the
+    proof replaces the allclose.
     """
     import warnings
 
     from repro.launch.costing import schedule_cost
+
+    baseline_prog = None
+    if certify:
+        from repro.core.effects import certify_equivalence
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            baseline_engine, _ = build(base)
+        baseline_prog = baseline_engine.program
 
     candidates: List[Candidate] = []
     for knobs in _expand_space(space, base):
@@ -229,6 +258,12 @@ def tune(
         if lint is not None:  # never time an invalid program
             cand.error = f"stlint: {lint}"
             continue
+        if baseline_prog is not None:
+            cand.certificate = certify_equivalence(
+                baseline_prog, engine.program)
+            if not cand.certificate.equivalent:
+                cand.error = f"uncertified: {cand.certificate.reason}"
+                continue
         kind = engine_kind or (
             "persistent" if type(engine).__name__ == "PersistentEngine"
             else "fused")
@@ -249,12 +284,27 @@ def tune(
     viable.sort(key=lambda c: c.predicted_us)
     for cand in viable[:max(1, measure_top)]:
         cand.stats = measure(cand.engine, cand.fresh, inner, repeats)
+        certified = (cand.certificate is not None
+                     and cand.certificate.equivalent)
+        if check is not None and not certified:
+            try:
+                check(cand)
+            except Exception as e:  # numeric validation failed: reject
+                cand.error = f"check: {type(e).__name__}: {e}"
+                cand.stats = None
+                continue
         if verbose:
             print(f"  tune: measure {cand.measured_ms:9.2f}ms  "
-                  f"[{cand.knobs.label()}]", flush=True)
+                  f"[{cand.knobs.label()}]"
+                  + ("  [certified]" if certified else ""), flush=True)
 
-    best = min((c for c in viable if c.stats is not None),
-               key=lambda c: c.stats["med_s"])
+    survivors = [c for c in viable if c.stats is not None
+                 and c.error is None]
+    if not survivors:
+        reasons = "; ".join(f"[{c.knobs.label()}] {c.error}"
+                            for c in candidates if c.error)
+        raise ValueError(f"no measured candidate survived: {reasons}")
+    best = min(survivors, key=lambda c: c.stats["med_s"])
     if verbose:
         print(f"  tune: best [{best.knobs.label()}] "
               f"med={best.measured_ms:.2f}ms "

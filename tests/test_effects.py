@@ -1,0 +1,276 @@
+"""STProve (repro.core.effects) — effect traces, certificates, tuning.
+
+Covers the effect substrate end to end: declared effect sets recorded on
+every built batch, unique staging stamps, the per-buffer effect trace
+and its digest (invariant under every numerics-preserving knob, sensitive
+to structural change), transform-equivalence certificates, their
+consumption by the auto-tuner (certified candidates skip the numeric
+check; uncertified ones are disqualified), and the property the whole
+pyramid rests on: a certified race-free composed schedule is
+**bit-identical** on the persistent engine under any legal segment
+interleaving (random orders × granularities; hypothesis-driven when the
+library is available, a seeded deterministic sweep otherwise).
+"""
+
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FacesConfig,
+    OffsetPeer,
+    PersistentEngine,
+    STQueue,
+    build_faces_program,
+    compose,
+    half_config,
+    split_halves,
+)
+from repro.core.effects import (
+    EquivalenceCertificate,
+    certify_equivalence,
+    effect_trace,
+    program_certificate,
+    program_digest,
+)
+from repro.core.schedule import InterleavePolicy
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container ships without hypothesis; gated below
+    HAVE_HYPOTHESIS = False
+
+
+GRID = (1, 1, 1)
+POINTS = (6, 6, 6)
+INNER = 2
+
+
+def _mesh():
+    from repro.parallel import make_mesh
+    return make_mesh(GRID, ("gx", "gy", "gz"))
+
+
+def _half_cfg(**kw):
+    return half_config(FacesConfig(grid=GRID, points=POINTS, **kw))
+
+
+def _halves_sched(interleave=None, coalesce=True):
+    mesh = _mesh()
+    cfg = _half_cfg()
+    pA = build_faces_program(cfg, mesh, name="facesA",
+                             coalesce=coalesce).persistent(INNER)
+    pB = build_faces_program(cfg, mesh, name="facesB",
+                             coalesce=coalesce).persistent(INNER)
+    kw = {} if interleave is None else {"interleave": interleave}
+    return compose(pA, pB, verify="off", **kw)
+
+
+def _halves_inputs():
+    rng = np.random.RandomState(0)
+    ua, ub = split_halves(rng.randn(*GRID, *POINTS).astype(np.float32))
+    return ua, ub
+
+
+# -- effect recording ---------------------------------------------------------
+
+
+class TestEffectRecording:
+    def _exchange(self, n_batches=2):
+        q = STQueue(_mesh(), name="p")
+        q.buffer("u", (4,), np.float32, pspec=("gx",))
+        for b in range(n_batches):
+            q.buffer(f"halo{b}", (4,), np.float32, pspec=("gx",))
+        for b in range(n_batches):
+            q.enqueue_send("u", OffsetPeer("gx", 0, periodic=True), tag=b)
+            q.enqueue_recv(f"halo{b}", OffsetPeer("gx", 0, periodic=True),
+                           tag=b)
+            q.enqueue_start()
+        q.enqueue_wait()
+        return q.build(verify="off")
+
+    def test_batches_carry_effects(self):
+        prog = self._exchange()
+        for b in prog.batches:
+            assert b.effects, b
+            kinds = {(e.source, e.kind) for e in b.effects}
+            # pack read of the send source + deposit write into the slot
+            assert ("pack", "read") in kinds
+            assert ("deposit", "write") in kinds
+
+    def test_staging_effects_and_unique_stamps(self):
+        prog = self._exchange()
+        stamps = [t.staging for b in prog.batches if b.plan
+                  for t in b.plan.transfers]
+        assert stamps and all(s for s in stamps)
+        assert len(stamps) == len(set(stamps))  # unique per batch/transfer
+        for b in prog.batches:
+            stage = [e for e in b.effects if e.source == "stage"]
+            # each transfer stages: one write (pack-in) + one read (deposit)
+            assert {e.kind for e in stage} == {"read", "write"}
+
+    def test_composed_batches_rerecord_effects(self):
+        sched = _halves_sched()
+        comm = [b for b in sched.batches if b.channels or b.colls]
+        assert comm
+        for b in comm:
+            assert b.effects
+            # namespaced buffer names survive into the effect records
+            assert all("/" in e.buf or e.buf.startswith("~")
+                       for e in b.effects), b.effects
+
+
+# -- traces, digests, certificates --------------------------------------------
+
+
+class TestCertificates:
+    def test_digest_invariant_under_schedule_knobs(self):
+        base = program_digest(_halves_sched())
+        assert base == program_digest(_halves_sched())  # deterministic
+        assert base == program_digest(_halves_sched(interleave="sequential"))
+        assert base == program_digest(
+            _halves_sched(interleave=InterleavePolicy(order=(1, 0),
+                                                      granularity=3)))
+        assert base == program_digest(_halves_sched(coalesce=False))
+
+    def test_certify_equivalence_across_interleaves(self):
+        cert = certify_equivalence(_halves_sched(),
+                                   _halves_sched(interleave="sequential"))
+        assert isinstance(cert, EquivalenceCertificate)
+        assert cert.equivalent and cert.race_free
+        assert cert.baseline_digest == cert.candidate_digest
+        assert cert.n_buffers > 0
+
+    def test_structural_change_breaks_certificate(self):
+        base = _halves_sched()
+        mutated = _halves_sched()
+        descs = list(mutated.descriptors)
+        from repro.core.descriptors import KernelDesc
+        ki = next(i for i, d in enumerate(descs)
+                  if isinstance(d, KernelDesc))
+        descs[ki] = dataclasses.replace(descs[ki], name="tampered")
+        mutated = dataclasses.replace(mutated, descriptors=tuple(descs))
+        cert = certify_equivalence(base, mutated)
+        assert not cert.equivalent
+        assert cert.reason  # names the first diverging buffer
+
+    def test_different_buffer_sets_not_equivalent(self):
+        mesh = _mesh()
+        solo = build_faces_program(_half_cfg(), mesh,
+                                   name="facesA").persistent(INNER)
+        cert = certify_equivalence(_halves_sched(), solo)
+        assert not cert.equivalent
+        assert "buffer" in cert.reason
+
+    def test_program_certificate(self):
+        prog = _halves_sched()
+        cert = program_certificate(prog)
+        assert cert.race_free and cert.n_races == 0
+        assert cert.digest == program_digest(prog)
+        assert cert.n_effects == sum(
+            len(t) for t in effect_trace(prog).values())
+
+    def test_registry_certificates_all_race_free(self):
+        from repro.analysis import certificates
+        certs = certificates(device_count=1)
+        assert len(certs) >= 10
+        racy = [n for n, c in certs if not c.race_free]
+        assert not racy, racy
+
+
+# -- tuner consumption --------------------------------------------------------
+
+
+class TestTuneCertification:
+    def _build(self, knobs):
+        ua, ub = _halves_inputs()
+        sched = _halves_sched(interleave=knobs.interleave_policy())
+        eng = PersistentEngine(sched, mode=knobs.mode, donate=True)
+        fresh = lambda: eng.init_buffers({"facesA/u": ua, "facesB/u": ub})
+        return eng, fresh
+
+    SPACE = {"interleave": ["round_robin", "sequential"]}
+
+    def test_certified_candidates_skip_check(self):
+        from repro.launch.tune import tune
+        calls = []
+        res = tune(self._build, self.SPACE, inner=1, repeats=1,
+                   measure_top=1, certify=True, check=calls.append)
+        assert calls == []  # the proof replaced the allclose
+        for c in res.candidates:
+            assert c.certificate is not None and c.certificate.equivalent
+            assert c.error is None
+
+    def test_certification_does_not_change_measured_pool(self):
+        from repro.launch.tune import tune
+        r1 = tune(self._build, self.SPACE, inner=1, repeats=1,
+                  measure_top=2, certify=True)
+        r0 = tune(self._build, self.SPACE, inner=1, repeats=1,
+                  measure_top=2)
+        assert (sorted(c.knobs.label() for c in r1.measured)
+                == sorted(c.knobs.label() for c in r0.measured))
+
+    def test_uncertified_candidates_fall_back_to_check(self):
+        from repro.launch.tune import tune
+
+        def reject(cand):
+            raise AssertionError("numerics rejected")
+
+        # without certificates the failing check disqualifies everything
+        with pytest.raises(ValueError, match="no measured candidate"):
+            tune(self._build, self.SPACE, inner=1, repeats=1,
+                 measure_top=1, check=reject)
+        # with certificates the same failing check never runs
+        res = tune(self._build, self.SPACE, inner=1, repeats=1,
+                   measure_top=1, certify=True, check=reject)
+        assert res.best.certificate.equivalent
+
+
+# -- the property: certified race-free => interleave-invariant execution ------
+
+
+def _run_interleaving(order, granularity, ua, ub):
+    sched = _halves_sched(
+        interleave=InterleavePolicy(order=order, granularity=granularity))
+    assert program_certificate(sched).race_free
+    eng = PersistentEngine(sched, mode="dataflow", donate=True)
+    out = eng(eng.init_buffers({"facesA/u": ua, "facesB/u": ub}))
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+class TestInterleaveInvariance:
+    def test_random_legal_interleavings_bit_identical(self):
+        ua, ub = _halves_inputs()
+        ref = _run_interleaving(None, 1, ua, ub)
+        r = random.Random(1234)
+        for _ in range(3):
+            g = r.choice([1, 2, 3, 5, 50])
+            order = tuple(r.sample(range(2), 2))
+            got = _run_interleaving(order, g, ua, ub)
+            assert set(got) == set(ref)
+            for k in ref:
+                np.testing.assert_array_equal(
+                    ref[k], got[k],
+                    err_msg=f"{k} diverged under order={order} g={g}")
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=8, deadline=None)
+        @given(order=st.permutations(range(2)),
+               granularity=st.integers(min_value=1, max_value=64))
+        def test_hypothesis_interleavings_bit_identical(self, order,
+                                                        granularity):
+            ua, ub = _halves_inputs()
+            ref = _run_interleaving(None, 1, ua, ub)
+            got = _run_interleaving(tuple(order), granularity, ua, ub)
+            for k in ref:
+                np.testing.assert_array_equal(
+                    ref[k], got[k],
+                    err_msg=f"{k} diverged under order={order} "
+                            f"g={granularity}")
+    else:
+        def test_hypothesis_interleavings_bit_identical(self):
+            pytest.importorskip("hypothesis")

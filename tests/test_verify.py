@@ -354,6 +354,153 @@ class TestRules:
             assert not verify_program(cm.program)
 
 
+# -- happens-before rules (STProve, ST015-ST019) ------------------------------
+
+
+def _linked_chain(persistent=0, deposits=1):
+    """A composed A->B channel chain to mutate: A sends ``deposits``
+    messages (one per batch), B receives each into ``slot`` and, after
+    its final wait, doubles it into ``out``."""
+    mesh = _meshx()
+    qa = STQueue(mesh, name="A")
+    qa.buffer("a", (4,), np.float32, pspec=("x",))
+    for t in range(deposits):
+        qa.enqueue_send("a", OffsetPeer("x", 0, periodic=True), tag=7 + t,
+                        remote="B")
+        qa.enqueue_start()
+        qa.enqueue_wait()
+    qb = STQueue(mesh, name="B")
+    qb.buffer("slot", (4,), np.float32, pspec=("x",))
+    qb.buffer("out", (4,), np.float32, pspec=("x",))
+    for t in range(deposits):
+        qb.enqueue_recv("slot", OffsetPeer("x", 0, periodic=True), tag=7 + t,
+                        remote="A")
+        qb.enqueue_start()
+        qb.enqueue_wait()
+    qb.enqueue_kernel(lambda s: s * 2.0, ["slot"], ["out"], name="double")
+    pa, pb = qa.build(verify="off"), qb.build(verify="off")
+    if persistent:
+        pa, pb = pa.persistent(persistent), pb.persistent(persistent)
+    return compose(pa, pb, verify="off")
+
+
+def _move_kernel(prog, dest_index):
+    """Pop the (single) kernel descriptor and reinsert it at ``dest_index``."""
+    descs = list(prog.descriptors)
+    ki = next(i for i, d in enumerate(descs) if isinstance(d, KernelDesc))
+    k = descs.pop(ki)
+    descs.insert(dest_index, k)
+    return _with_descs(prog, descs)
+
+
+class TestHappensBefore:
+    def test_clean_linked_chains_have_no_hb_diagnostics(self):
+        for prog in (_linked_chain(), _linked_chain(persistent=3),
+                     _linked_chain(persistent=3, deposits=2)):
+            assert not _codes(prog) & {"ST015", "ST016", "ST017", "ST018"}
+
+    def test_st015_kernel_deposit_race(self):
+        # move B's unpack kernel before B's gating wait: the kernel's
+        # read of `slot` is no longer ordered against A's deposit
+        prog = _linked_chain()
+        bad = _move_kernel(prog, _idx(prog, WaitDesc, pid=1))
+        diags = [d for d in verify_program(bad) if d.rule == "ST015"]
+        assert diags and diags[0].severity == "error"
+        assert "happens-before" in diags[0].message
+
+    def test_st015_fires_where_the_stream_walk_is_blind(self):
+        # kernel moved to the very FRONT of the stream: the emitted
+        # order is walk-silent (no deposit is pending yet when the
+        # kernel runs), but under an interleaving that runs A first the
+        # deposit races the read — only the HB graph sees it
+        bad = _move_kernel(_linked_chain(), 0)
+        assert _codes(bad) == {"ST015"}
+
+    def test_st016_war_on_rotated_slot(self):
+        # persistent: `slot` is a rotated message slot; a read that may
+        # precede the pass's first deposit hits the stale alternate copy
+        prog = _linked_chain(persistent=3)
+        bad = _move_kernel(prog, _idx(prog, WaitDesc, pid=1))
+        diags = [d for d in verify_program(bad) if d.rule == "ST016"]
+        assert diags and diags[0].severity == "error"
+        # the same mutation on the one-shot program is ST015-only:
+        # rotation hazards need the persistent loop
+        oneshot = _move_kernel(_linked_chain(), _idx(_linked_chain(),
+                                                     WaitDesc, pid=1))
+        assert "ST016" not in _codes(oneshot)
+
+    def test_st017_staging_reuse_across_overlapping_windows(self):
+        # two batches in flight under ONE wait: their trigger-to-wait
+        # windows overlap, so their transfers must not share a staging
+        # buffer.  The default build stamps unique names (clean); the
+        # mutation forces a collision.
+        prog = _exchange(_meshx(), n_batches=2)
+        assert "ST017" not in _codes(prog)
+        batches = []
+        for b in prog.batches:
+            plan = dataclasses.replace(
+                b.plan, transfers=tuple(
+                    dataclasses.replace(t, staging="~stage/shared")
+                    for t in b.plan.transfers))
+            batches.append(dataclasses.replace(b, plan=plan))
+        bad = dataclasses.replace(prog, batches=tuple(batches))
+        diags = [d for d in verify_program(bad) if d.rule == "ST017"]
+        assert diags and diags[0].severity == "error"
+        assert "~stage/shared" in diags[0].message
+
+    def test_st017_ordered_windows_may_share_staging(self):
+        # wait BETWEEN the batches: window 0 provably retires before
+        # window 1 triggers, so reusing the staging buffer is legal
+        q = STQueue(_meshx(), name="p")
+        q.buffer("u", (4,), np.float32, pspec=("x",))
+        for b in range(2):
+            q.buffer(f"halo{b}", (4,), np.float32, pspec=("x",))
+        for b in range(2):
+            q.enqueue_send("u", OffsetPeer("x", 0, periodic=True), tag=b)
+            q.enqueue_recv(f"halo{b}", OffsetPeer("x", 0, periodic=True),
+                           tag=b)
+            q.enqueue_start()
+            q.enqueue_wait()
+        prog = q.build(verify="off")
+        batches = tuple(
+            dataclasses.replace(b, plan=dataclasses.replace(
+                b.plan, transfers=tuple(
+                    dataclasses.replace(t, staging="~stage/shared")
+                    for t in b.plan.transfers)))
+            for b in prog.batches)
+        shared = dataclasses.replace(prog, batches=batches)
+        assert "ST017" not in _codes(shared)
+
+    def test_st018_donated_read_races_second_deposit(self):
+        # two deposits into one slot; the kernel lands between the
+        # second start and its wait: ordered after deposit 1 but racing
+        # deposit 2 — the read may see either generation's copy
+        prog = _linked_chain(persistent=3, deposits=2)
+        bad = _move_kernel(prog, _idx(prog, WaitDesc, pid=1, last=True))
+        diags = [d for d in verify_program(bad) if d.rule == "ST018"]
+        assert diags and diags[0].severity == "error"
+        assert "ST016" not in _codes(bad)  # ordered after the FIRST write
+
+    def test_st019_implicit_effects_warning(self):
+        q = STQueue(_meshx(), name="ic")
+        q.buffer("u", (4,), np.float32, pspec=("x",))
+        q.buffer("v", (4,), np.float32, pspec=("x",))
+        q.enqueue_compute(lambda u: u + 1.0, writes=["v"])
+        prog = q.build(verify="off")
+        d = next(d for d in verify_program(prog) if d.rule == "ST019")
+        assert d.severity == "warning"
+        assert d.site and "test_verify.py" in d.site
+        kd = next(x for x in prog.descriptors if isinstance(x, KernelDesc))
+        assert kd.implicit_effects and kd.reads == ("u", "v")
+
+    def test_st019_declared_effects_are_clean(self):
+        q = STQueue(_meshx(), name="ok")
+        q.buffer("u", (4,), np.float32, pspec=("x",))
+        q.buffer("v", (4,), np.float32, pspec=("x",))
+        q.enqueue_compute(lambda u: u + 1.0, reads=["u"], writes=["v"])
+        assert "ST019" not in _codes(q.build(verify="off"))
+
+
 # -- policy wiring ------------------------------------------------------------
 
 
